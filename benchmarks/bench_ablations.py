@@ -1,0 +1,168 @@
+"""Paper Tab. 7 (hybrid vs single-resource), Fig. 11 (threshold sweep),
+Tab. 8 (load balancing, Bit-Decoding, preprocessing)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import corpus, timeit
+from repro.core import preprocess
+from repro.core.balance import BalanceParams, balance_report
+from repro.core.formats import device_arrays
+from repro.core.sddmm import LibraSDDMM
+from repro.core.spmm import LibraSpMM
+from repro.core.threshold import HardwareModel, analytic_threshold
+from repro.kernels import ref
+from repro.sparse import power_law_csr
+from repro.sparse.generate import mixed_csr
+
+
+def tab7_hybrid_vs_single() -> list[tuple]:
+    """Measured CPU speedups + modeled-TPU speedups (the paper's Tab. 7
+    regime only exists on hardware with asymmetric units)."""
+    from repro.core.formats import WINDOW
+    from repro.core.threshold import model_spmm_time
+
+    rows = []
+    rng = np.random.default_rng(4)
+    sp_up_c, sp_up_t = [], []
+    md_up_c, md_up_t = [], []
+    for name, a in corpus().items():
+        b = jnp.asarray(rng.standard_normal((a.k, 128)).astype(np.float32))
+        t = {m: timeit(lambda op=LibraSpMM(a, mode=m): op(b))
+             for m in ("hybrid", "tcu", "vpu")}
+        sp_up_c.append(t["vpu"] / t["hybrid"])
+        sp_up_t.append(t["tcu"] / t["hybrid"])
+        m_h = model_spmm_time(preprocess.preprocess_spmm(a), 128)
+        m_t = model_spmm_time(preprocess.preprocess_spmm(a, 1), 128)
+        m_v = model_spmm_time(preprocess.preprocess_spmm(a, WINDOW + 1), 128)
+        md_up_c.append(m_v / m_h)
+        md_up_t.append(m_t / m_h)
+    rows.append(("tab7/spmm_hybrid_vs_vpu_gmean_cpu", 0.0,
+                 f"{np.exp(np.mean(np.log(sp_up_c))):.2f}x"))
+    rows.append(("tab7/spmm_hybrid_vs_tcu_gmean_cpu", 0.0,
+                 f"{np.exp(np.mean(np.log(sp_up_t))):.2f}x"))
+    rows.append(("tab7/spmm_hybrid_vs_vpu_gmean_tpu_model", 0.0,
+                 f"{np.exp(np.mean(np.log(md_up_c))):.2f}x"))
+    rows.append(("tab7/spmm_hybrid_vs_tcu_gmean_tpu_model", 0.0,
+                 f"{np.exp(np.mean(np.log(md_up_t))):.2f}x"))
+    return rows
+
+
+def fig11_threshold_sweep() -> list[tuple]:
+    """CPU wall-time cannot expose the MXU/VPU asymmetry (both paths run
+    on the same ALUs here), so alongside measured CPU times we sweep the
+    TPU cost model (repro.core.threshold.model_spmm_time) — that is the
+    paper's Fig.-11 interior optimum."""
+    from repro.core.threshold import model_spmm_time, modeled_best_threshold
+
+    rows = []
+    rng = np.random.default_rng(5)
+    for name, a in [("mixed", mixed_csr(384, 384, seed=8)),
+                    ("powerlaw", power_law_csr(384, 384, 10.0, seed=8))]:
+        b = jnp.asarray(rng.standard_normal((a.k, 128)).astype(np.float32))
+        base = timeit(lambda op=LibraSpMM(a, mode="vpu"): op(b))
+        modeled = modeled_best_threshold(a, n=128)
+        best_model = min(modeled, key=modeled.get)
+        for thr in range(1, 9):
+            secs = timeit(lambda op=LibraSpMM(a, threshold=thr): op(b))
+            rows.append((f"fig11/{name}/thr{thr}", secs * 1e6,
+                         f"x{base / secs:.2f}_vs_vpu;"
+                         f"tpu_model={modeled[thr] * 1e6:.1f}us"))
+        rows.append((f"fig11/{name}/best_modeled_tpu", 0.0, str(best_model)))
+    rows.append(("fig11/analytic_threshold", 0.0,
+                 str(analytic_threshold(HardwareModel()))))
+    return rows
+
+
+def tab8_load_balancing() -> list[tuple]:
+    """Balanced segments vs naive row-sharding on power-law matrices:
+    modeled shard-imbalance (max/mean work per device)."""
+    rows = []
+    a = power_law_csr(2048, 2048, 16.0, alpha=1.6, seed=9)
+    plan = preprocess.preprocess_spmm(a, balance=BalanceParams(ts=8, cs=32))
+    seg_sizes = np.asarray(
+        [plan.vpu.vals[t][plan.vpu.vals[t] != 0].size
+         for t in range(plan.vpu.ntiles)])
+    bal = balance_report(seg_sizes, 16)
+    # naive: contiguous row blocks
+    per_row = np.diff(a.indptr)
+    naive = per_row.reshape(16, -1).sum(1)
+    naive_ratio = naive.max() / max(naive.mean(), 1e-9)
+    rows.append(("tab8/balance/naive_max_over_mean", 0.0,
+                 f"{naive_ratio:.2f}"))
+    rows.append(("tab8/balance/libra_max_over_mean", 0.0,
+                 f"{bal['max_over_mean']:.2f}"))
+    rows.append(("tab8/balance/modeled_speedup", 0.0,
+                 f"{naive_ratio / bal['max_over_mean']:.2f}x"))
+    return rows
+
+
+def tab8_bit_decoding() -> list[tuple]:
+    """Bit-Decoding write-back (precomputed positions via bitmap popcount
+    at preprocessing) vs TC-GNN-style runtime traversal (each element
+    scans its predecessors to find the write slot)."""
+    rows = []
+    rng = np.random.default_rng(6)
+    a = mixed_csr(512, 512, seed=10)
+    op = LibraSDDMM(a, mode="hybrid")
+    x = jnp.asarray(rng.standard_normal((a.m, 32)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((a.k, 32)).astype(np.float32))
+    t_bit = timeit(lambda: op(x, y))
+
+    arrs = op.arrays
+
+    @jax.jit
+    def traversal_writeback(x, y):
+        s_tc = ref.sddmm_tc_ref(arrs["tc_cols"], arrs["tc_bitmap"],
+                                arrs["tc_window"], x, y)
+        # Runtime position computation: popcount-prefix per element over
+        # the block bitmap (the traversal TC-GNN/ME-TCF perform on the fly).
+        bits = ref.bitmap_mask(arrs["tc_bitmap"])  # (nb, 8, bk)
+        flat = bits.reshape(bits.shape[0], -1)
+        prefix = jnp.cumsum(flat, axis=1) - flat.astype(jnp.int32)
+        offsets = jnp.cumsum(
+            jnp.concatenate([jnp.zeros(1, jnp.int32),
+                             flat.sum(1)[:-1].astype(jnp.int32)]))
+        pos = prefix + offsets[:, None]
+        out = jnp.zeros((op.nnz + 1,), s_tc.dtype)
+        pos = jnp.where(flat, pos, op.nnz)
+        return out.at[pos.reshape(-1)].add(s_tc.reshape(-1))[:op.nnz]
+
+    t_trav = timeit(traversal_writeback, x, y)
+    rows.append(("tab8/bit_decoding_us", t_bit * 1e6, ""))
+    rows.append(("tab8/traversal_us", t_trav * 1e6,
+                 f"bit_decoding_{t_trav / t_bit:.2f}x_faster"))
+    return rows
+
+
+def tab8_preprocessing() -> list[tuple]:
+    """Bulk-vectorized (device-style data-parallel) preprocessing vs the
+    scalar element loop and the per-window semi-vectorized variant —
+    the analogue of the paper's GPU-vs-OpenMP 17.1×."""
+    rows = []
+    a = power_law_csr(8192, 8192, 24.0, seed=11)
+    t0 = time.perf_counter()
+    preprocess.preprocess_spmm(a)
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    preprocess.preprocess_spmm_loop(a)
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    preprocess._preprocess_spmm_semivectorized(a)
+    t_semi = time.perf_counter() - t0
+    rows.append(("tab8/preprocess_bulk_us", t_vec * 1e6, f"nnz={a.nnz}"))
+    rows.append(("tab8/preprocess_scalar_us", t_loop * 1e6,
+                 f"bulk_{t_loop / max(t_vec, 1e-9):.1f}x_faster"))
+    rows.append(("tab8/preprocess_perwindow_us", t_semi * 1e6,
+                 f"bulk_{t_semi / max(t_vec, 1e-9):.1f}x_faster"))
+    return rows
+
+
+def run() -> list[tuple]:
+    return (tab7_hybrid_vs_single() + fig11_threshold_sweep()
+            + tab8_load_balancing() + tab8_bit_decoding()
+            + tab8_preprocessing())

@@ -1,0 +1,35 @@
+"""Paper Fig. 1: NNZ-1 vector fraction across the corpus + the hybrid
+sweet-point case study (performance vs TCU-compute ratio on one matrix)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import corpus, spmm_gflops, timeit
+from repro.core import nnz1_fraction
+from repro.core.spmm import LibraSpMM
+from repro.sparse.generate import mixed_csr
+
+
+def run() -> list[tuple]:
+    rows = []
+    fracs = {name: nnz1_fraction(a) for name, a in corpus().items()}
+    for name, f in sorted(fracs.items(), key=lambda kv: -kv[1]):
+        rows.append((f"fig1/nnz1_frac/{name}", 0.0, f"{f:.3f}"))
+
+    # Case study (paper: pkustk01): sweep the threshold 1..9 on a
+    # hybrid-regime matrix; report GFLOPS per TCU-compute ratio.
+    a = mixed_csr(512, 512, seed=3)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((a.k, 128)).astype(np.float32))
+    best = (None, 0.0)
+    for thr in range(1, 10):
+        op = LibraSpMM(a, mode="hybrid", threshold=thr)
+        secs = timeit(lambda: op(b))
+        gf = spmm_gflops(a.nnz, 128, secs)
+        rows.append((f"fig1/case_thr{thr}_tcu{op.tc_ratio:.2f}",
+                     secs * 1e6, f"{gf:.2f}GF"))
+        if gf > best[1]:
+            best = (thr, gf)
+    rows.append(("fig1/best_threshold", 0.0, str(best[0])))
+    return rows

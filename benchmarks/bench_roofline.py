@@ -1,0 +1,31 @@
+"""Paper Tab. 5 analogue + §Roofline: read the dry-run artifacts and emit
+the per-(arch × shape) roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run() -> list[tuple]:
+    rows = []
+    cells = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not cells:
+        return [("roofline/no_dryrun_artifacts_yet", 0.0, "run dryrun.py")]
+    for path in cells:
+        with open(path) as f:
+            cell = json.load(f)
+        key = f"roofline/{cell['arch']}/{cell['shape']}/{cell['mesh']}"
+        if not str(cell["status"]).startswith("ok"):
+            rows.append((key, 0.0, cell["status"].splitlines()[0][:60]))
+            continue
+        rl = cell["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0.0
+        rows.append((key, dom * 1e6,
+                     f"bott={rl['bottleneck']};useful={rl['useful_ratio']:.2f};"
+                     f"roofline_frac={frac:.3f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: timing, corpus, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.sparse import suitesparse_like_corpus
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 2):
+    """Median wall time of a jit'd callable (seconds)."""
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def spmm_gflops(nnz: int, n: int, secs: float) -> float:
+    return 2.0 * nnz * n / secs / 1e9
+
+
+def sddmm_gflops(nnz: int, k: int, secs: float) -> float:
+    return 2.0 * nnz * k / secs / 1e9
+
+
+def corpus(n: int = 8):
+    return suitesparse_like_corpus(n_small=n, seed=7)
+
+
+def emit(rows: list[tuple]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,50 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (fig1,spmm,sddmm,"
+                         "ablations,gnn,roofline)")
+    args = ap.parse_args()
+    from benchmarks import (
+        bench_ablations,
+        bench_fig1_nnz1,
+        bench_gnn_e2e,
+        bench_roofline,
+        bench_sddmm,
+        bench_spmm,
+    )
+
+    suites = {
+        "fig1": bench_fig1_nnz1.run,
+        "spmm": bench_spmm.run,
+        "sddmm": bench_sddmm.run,
+        "ablations": bench_ablations.run,
+        "gnn": bench_gnn_e2e.run,
+        "roofline": bench_roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed = True
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

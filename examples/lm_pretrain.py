@@ -1,0 +1,38 @@
+"""End-to-end LM training driver: trains a ~100M-param dense transformer
+for a few hundred steps through the full production stack (sharded
+train_step, AdamW, checkpointing + resume, deterministic data pipeline).
+
+    PYTHONPATH=src python examples/lm_pretrain.py --steps 300
+    (defaults are sized for CPU; drop --steps for a quick pass)
+"""
+import argparse
+
+from repro.launch.train import train_loop
+from repro.models.config import ArchConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: 12L × d768 (GPT-2-small-ish), GQA 12h/4kv.
+    cfg = ArchConfig(
+        name="lm-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv=4, d_ff=3072, vocab=32768, attn_chunk=256,
+        remat=False,
+    )
+    _, losses = train_loop(cfg, args.steps, args.batch, args.seq,
+                           ckpt_dir=args.ckpt_dir, resume=True,
+                           log_every=20, save_every=100)
+    print(f"[lm_pretrain] loss {losses[0]:.3f} → {losses[-1]:.3f} "
+          f"over {len(losses)} steps")
+    assert losses[-1] < losses[0]
+    print("lm_pretrain OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: Libra (hybrid MXU/VPU sparse matrix multiplication) on TPU in JAX."""

@@ -1,0 +1,12 @@
+from repro.core.spmm import LibraSpMM
+from repro.core.sddmm import LibraSDDMM
+from repro.core.preprocess import preprocess_spmm, preprocess_sddmm
+from repro.core.windows import nnz1_fraction
+
+__all__ = [
+    "LibraSpMM",
+    "LibraSDDMM",
+    "preprocess_spmm",
+    "preprocess_sddmm",
+    "nnz1_fraction",
+]

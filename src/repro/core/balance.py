@@ -1,0 +1,100 @@
+"""Hybrid load balancing (paper §4.3, Fig. 6) — TPU reinterpretation.
+
+The paper decomposes windows whose TCU/CUDA workloads exceed ``Ts`` TC
+blocks / ``Cs`` tile elements, marking decomposed segments with an
+``Atomic`` flag so partial results are atomically accumulated.
+
+On TPU there is no atomicAdd and a Pallas grid executes sequentially per
+core, so the decomposition serves two purposes instead:
+
+1. **Bounded segments** — every segment is a fixed-size unit of work, so
+   sharding segments across devices (shard_map over the graph) is balanced
+   regardless of the row-length distribution (the paper's power-law case).
+2. **Deterministic combine** — the ``atomic`` flag marks segments whose
+   output row/window is written by >1 producer (another segment or the
+   other compute path); those go through a segment-sum reduction, the
+   others can store directly. This is the exact analogue of "invoke
+   atomicAdd only when necessary".
+
+Auxiliary arrays map 1:1 to the paper's: ``window_offset``/``row_offset``
+(work per segment), ``cur_window``/``cur_row`` (original indices), and
+``atomic``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BalanceParams:
+    ts: int = 32          # max TC blocks per segment (paper Ts)
+    cs: int = 32          # max VPU tile elements per tile row-segment (paper Cs)
+    short_len: int = 3    # rows with ≤ short_len residual nnz are "short tiles"
+
+
+@dataclasses.dataclass(frozen=True)
+class Segments:
+    """Decomposition result for one kind of workload.
+
+    sizes:   (nseg,) work units per segment
+    cur:     (nseg,) original window (TC) or row (VPU) index
+    atomic:  (nseg,) bool — output shared with another producer
+    """
+
+    sizes: np.ndarray
+    cur: np.ndarray
+    atomic: np.ndarray
+
+
+def decompose_counts(counts: np.ndarray, limit: int,
+                     shared_output: np.ndarray) -> Segments:
+    """Split per-owner work counts into segments of ≤ limit units.
+
+    ``shared_output[i]`` is True when owner ``i``'s output is also produced
+    elsewhere (e.g. the window has both TC and VPU work) — its segments are
+    atomic even without decomposition (paper Fig. 6, window 1 rule).
+    """
+    sizes, cur, atomic = [], [], []
+    for i, c in enumerate(np.asarray(counts)):
+        c = int(c)
+        if c == 0:
+            continue
+        nseg = (c + limit - 1) // limit
+        shared = bool(shared_output[i]) or nseg > 1
+        for s in range(nseg):
+            sizes.append(min(limit, c - s * limit))
+            cur.append(i)
+            atomic.append(shared)
+    return Segments(np.asarray(sizes, np.int64), np.asarray(cur, np.int64),
+                    np.asarray(atomic, bool))
+
+
+def propagate_atomicity(tc_windows: np.ndarray, tc_atomic: np.ndarray,
+                        vpu_windows: np.ndarray, vpu_atomic: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Paper Fig. 6 window-1 rule: once either path in a window is
+    decomposed, the other path's segments in that window become atomic too."""
+    hot = set(np.asarray(tc_windows)[np.asarray(tc_atomic)].tolist())
+    hot |= set(np.asarray(vpu_windows)[np.asarray(vpu_atomic)].tolist())
+    tc_atomic = np.asarray(
+        [a or (w in hot) for w, a in zip(tc_windows, tc_atomic)], dtype=bool)
+    vpu_atomic = np.asarray(
+        [a or (w in hot) for w, a in zip(vpu_windows, vpu_atomic)], dtype=bool)
+    return tc_atomic, vpu_atomic
+
+
+def balance_report(seg_sizes: np.ndarray, n_shards: int) -> dict:
+    """Imbalance metric: max/mean work per shard under round-robin segment
+    assignment — what the dry-run sharding uses to validate balance."""
+    if seg_sizes.size == 0:
+        return {"max_over_mean": 1.0, "shards": n_shards}
+    per = np.zeros(n_shards, np.int64)
+    order = np.argsort(-seg_sizes)  # LPT-ish greedy
+    for s in seg_sizes[order]:
+        per[np.argmin(per)] += int(s)
+    return {
+        "max_over_mean": float(per.max() / max(per.mean(), 1e-9)),
+        "shards": n_shards,
+    }

@@ -1,0 +1,160 @@
+"""Device-side formats produced by Libra preprocessing.
+
+Two storage families, mirroring the paper's bitmap (TC-block) + CSR split:
+
+* :class:`TCBlocks` — the MXU ("Tensor-core") portion. Non-zero 8×1 column
+  vectors whose NNZ passed the threshold, condensed into ``8 × BK`` blocks.
+  Each condensed column keeps its source column index and an 8-bit occupancy
+  bitmap (the paper's Bit-Decoding format). On TPU the values are stored as
+  a dense VMEM-tileable ``(nblk, 8, BK)`` array — the bitmap is used for
+  SDDMM sampling/write-back masks and for format size accounting.
+
+* :class:`VPUTiles` — the CUDA-core portion, adapted to the TPU VPU. The
+  residual non-zeros are packed into fixed-width tiles of ``TS`` elements,
+  each tile owned by a single output row (SpMM) or a flat element list
+  (SDDMM). Zero padding in a tile multiplies row 0 of B by 0.0 — harmless
+  and branch-free.
+
+Both carry segment/accumulation metadata from the hybrid load balancer
+(paper §4.3): ``segment_id`` plays the role of the ``CurWindow/CurRow``
+arrays and ``atomic`` marks partials that must be reduced (on TPU: summed
+via deterministic segment reduction instead of atomicAdd).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+WINDOW = 8  # paper: 8×1 non-zero column vectors (swap-and-transpose granularity)
+
+
+@dataclasses.dataclass(frozen=True)
+class TCBlocks:
+    """Condensed MXU blocks for one sparse matrix.
+
+    vals:    (nblk, WINDOW, bk) f32 — condensed dense tiles (zero padded)
+    cols:    (nblk, bk) i32 — source column index per condensed vector
+    bitmap:  (nblk, bk) u32 — 8-bit occupancy of each 8×1 vector
+    window:  (nblk,) i32 — output window (row-block) id of each block
+    atomic:  (nblk,) bool — True if this window's output is also written by
+             another path/segment and must go through the combine reduction
+    nnz:     int — non-zeros covered by this portion
+    """
+
+    vals: np.ndarray
+    cols: np.ndarray
+    bitmap: np.ndarray
+    window: np.ndarray
+    atomic: np.ndarray
+    nnz: int
+    bk: int
+    pos: np.ndarray | None = None  # (nblk, WINDOW, bk) canonical nnz idx, −1 pad
+
+    @property
+    def nblk(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def padded_zeros(self) -> int:
+        return int(self.vals.size - self.nnz)
+
+
+@dataclasses.dataclass(frozen=True)
+class VPUTiles:
+    """Residual-nonzero tiles for the VPU path (SpMM flavour).
+
+    vals: (nt, ts) f32, cols: (nt, ts) i32, row: (nt,) i32 output row.
+    long_tile: (nt,) bool — True for tiles from decomposed long rows
+    (paper's long/short CUDA-core tile split; short tiles own their row
+    exclusively and can store, long tiles must accumulate).
+    """
+
+    vals: np.ndarray
+    cols: np.ndarray
+    row: np.ndarray
+    long_tile: np.ndarray
+    atomic: np.ndarray
+    nnz: int
+    ts: int
+    pos: np.ndarray | None = None  # (nt, ts) canonical nnz idx, −1 pad
+
+    @property
+    def ntiles(self) -> int:
+        return int(self.vals.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class COOTiles:
+    """Element tiles for the SDDMM VPU path: flat (row, col) element lists."""
+
+    rows: np.ndarray  # (nt, ts) i32
+    cols: np.ndarray  # (nt, ts) i32
+    out_pos: np.ndarray  # (nt, ts) i32 — position in the canonical nnz array
+    mask: np.ndarray  # (nt, ts) bool
+    nnz: int
+    ts: int
+
+    @property
+    def ntiles(self) -> int:
+        return int(self.rows.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class SpMMPlan:
+    """Full Libra plan for SpMM on one sparse matrix."""
+
+    m: int
+    k: int
+    nnz: int
+    threshold: int
+    tc: TCBlocks
+    vpu: VPUTiles
+    meta: dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SDDMMPlan:
+    """Full Libra plan for SDDMM on one sparse mask."""
+
+    m: int
+    k: int  # number of columns of the sparse mask (= rows of B)
+    nnz: int
+    threshold: int
+    tc: TCBlocks  # vals unused (mask only); bitmap/cols/window are the block defs
+    tc_out_pos: np.ndarray  # (nblk, WINDOW, bk) i32 → canonical nnz positions (-1 pad)
+    vpu: COOTiles
+    meta: dict[str, Any]
+
+
+def device_arrays(plan) -> dict[str, jnp.ndarray]:
+    """Upload a plan's arrays once; reused across iterations (paper §4.1 ③)."""
+    out = {}
+    if isinstance(plan, SpMMPlan):
+        out.update(
+            tc_vals=jnp.asarray(plan.tc.vals),
+            tc_cols=jnp.asarray(plan.tc.cols),
+            tc_bitmap=jnp.asarray(plan.tc.bitmap),
+            tc_window=jnp.asarray(plan.tc.window),
+            tc_pos=jnp.asarray(plan.tc.pos),
+            vpu_vals=jnp.asarray(plan.vpu.vals),
+            vpu_cols=jnp.asarray(plan.vpu.cols),
+            vpu_row=jnp.asarray(plan.vpu.row),
+            vpu_pos=jnp.asarray(plan.vpu.pos),
+        )
+    elif isinstance(plan, SDDMMPlan):
+        out.update(
+            tc_cols=jnp.asarray(plan.tc.cols),
+            tc_bitmap=jnp.asarray(plan.tc.bitmap),
+            tc_window=jnp.asarray(plan.tc.window),
+            tc_out_pos=jnp.asarray(plan.tc_out_pos),
+            vpu_rows=jnp.asarray(plan.vpu.rows),
+            vpu_cols=jnp.asarray(plan.vpu.cols),
+            vpu_out_pos=jnp.asarray(plan.vpu.out_pos),
+            vpu_mask=jnp.asarray(plan.vpu.mask),
+        )
+    else:  # pragma: no cover
+        raise TypeError(type(plan))
+    return out

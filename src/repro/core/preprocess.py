@@ -1,0 +1,567 @@
+"""Libra preprocessing: distribution + balancing + format build (paper §4.5).
+
+Preprocessing runs once per sparse matrix; its products (:class:`SpMMPlan`
+/ :class:`SDDMMPlan`) are uploaded once and reused every iteration. Two
+implementations are provided:
+
+* the **vectorized** path (default) — NumPy/JAX bulk ops, the analogue of
+  the paper's GPU-accelerated preprocessing kernels;
+* a **scalar** per-element loop (:func:`preprocess_spmm_loop`) — the
+  sequential-CPU baseline the paper compares against (their OpenMP row).
+
+Both produce bit-identical plans (tested).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.balance import BalanceParams, decompose_counts, propagate_atomicity
+from repro.core.distribution import split_sddmm_window, split_spmm_window
+from repro.core.formats import (
+    COOTiles,
+    SDDMMPlan,
+    SpMMPlan,
+    TCBlocks,
+    VPUTiles,
+    WINDOW,
+)
+from repro.core.windows import extract_windows, num_windows
+from repro.sparse.matrix import SparseCSR
+
+DEFAULT_SPMM_THRESHOLD = 3    # paper Fig. 11: optimal ≈ 3 for 8×1 vectors
+DEFAULT_SDDMM_THRESHOLD = 24  # paper Fig. 11: optimal ≈ 24 for 8×16 blocks
+DEFAULT_BK_SPMM = 32          # condensed block depth (MXU k granularity)
+DEFAULT_BK_SDDMM = 16         # paper: 8×16 TC blocks for SDDMM
+
+
+def _pad_blocks(vals, cols, bitmap, window, atomic, nnz, bk, pos=None) -> TCBlocks:
+    if len(vals) == 0:
+        # Dummy zero block keeps kernel shapes static; contributes nothing.
+        vals = [np.zeros((WINDOW, bk), np.float32)]
+        cols = [np.zeros(bk, np.int32)]
+        bitmap = [np.zeros(bk, np.uint32)]
+        window = [0]
+        atomic = [False]
+        pos = [np.full((WINDOW, bk), -1, np.int32)] if pos is not None else None
+    return TCBlocks(
+        vals=np.stack(vals).astype(np.float32),
+        cols=np.stack(cols).astype(np.int32),
+        bitmap=np.stack(bitmap).astype(np.uint32),
+        window=np.asarray(window, np.int32),
+        atomic=np.asarray(atomic, bool),
+        nnz=nnz,
+        bk=bk,
+        pos=np.stack(pos).astype(np.int32) if pos is not None else None,
+    )
+
+
+def preprocess_spmm(
+    a: SparseCSR,
+    threshold: int = DEFAULT_SPMM_THRESHOLD,
+    bk: int = DEFAULT_BK_SPMM,
+    ts_tile: int = 32,
+    balance: BalanceParams | None = None,
+) -> SpMMPlan:
+    """2D-aware distribution at vector granularity + hybrid balancing.
+
+    Fully bulk-vectorized (NumPy ufunc scatters — the data-parallel
+    formulation of the paper's GPU preprocessing kernels): no per-element
+    Python. Produces bit-identical plans to :func:`preprocess_spmm_loop`.
+    """
+    balance = balance or BalanceParams()
+    nwin = num_windows(a.m)
+    rows, cols, vals = a.to_coo()
+    pos = np.arange(rows.shape[0], dtype=np.int32)
+    win = (rows // WINDOW).astype(np.int64)
+    sub = (rows % WINDOW).astype(np.int64)
+
+    # ---- Stage 1 (paper Alg. 1 step 1): vector identification.
+    order = np.lexsort((sub, cols, win))
+    winS, subS, colS, valS, posS = (win[order], sub[order], cols[order],
+                                    vals[order], pos[order])
+    if winS.size == 0:
+        return _empty_spmm_plan(a, threshold, bk, ts_tile, balance)
+    newvec = np.ones(winS.size, bool)
+    newvec[1:] = (winS[1:] != winS[:-1]) | (colS[1:] != colS[:-1])
+    vec_id = np.cumsum(newvec) - 1
+    nvec = int(vec_id[-1]) + 1
+    vec_count = np.bincount(vec_id, minlength=nvec)
+    vec_win = winS[newvec]
+    vec_col = colS[newvec]
+
+    # ---- Stage 2: 2D-aware threshold split at vector granularity.
+    vec_tc = vec_count >= threshold
+    el_tc = vec_tc[vec_id]
+    tc_nnz = int(vec_count[vec_tc].sum())
+    vpu_nnz = a.nnz - tc_nnz
+    win_has_tc = np.zeros(nwin, bool)
+    win_has_vpu = np.zeros(nwin, bool)
+    win_has_tc[vec_win[vec_tc]] = True
+    win_has_vpu[vec_win[~vec_tc]] = True
+    shared = win_has_tc & win_has_vpu
+
+    # ---- Stage 3a: condense TC vectors into 8×bk blocks (bulk scatter).
+    # rank of each TC vector within its window (vectors are window-sorted)
+    tc_vec_idx = np.nonzero(vec_tc)[0]
+    if tc_vec_idx.size:
+        tws = vec_win[tc_vec_idx]
+        first_in_win = np.ones(tc_vec_idx.size, bool)
+        first_in_win[1:] = tws[1:] != tws[:-1]
+        grp_start = np.maximum.accumulate(
+            np.where(first_in_win, np.arange(tc_vec_idx.size), 0))
+        rank = np.arange(tc_vec_idx.size) - grp_start
+        blk_in_win = rank // bk
+        slot = rank % bk
+        blocks_per_win = np.zeros(nwin, np.int64)
+        np.add.at(blocks_per_win, tws, (slot == 0).astype(np.int64))
+        win_blk_off = np.zeros(nwin, np.int64)
+        np.cumsum(blocks_per_win, out=win_blk_off[:])
+        win_blk_off = np.concatenate([[0], win_blk_off])[:-1]
+        vec_blk = win_blk_off[tws] + blk_in_win  # global block per TC vector
+        nblk = int(blocks_per_win.sum())
+        tc_vals_arr = np.zeros((nblk, WINDOW, bk), np.float32)
+        tc_cols_arr = np.zeros((nblk, bk), np.int32)
+        tc_bits_arr = np.zeros((nblk, bk), np.uint32)
+        tc_pos_arr = np.full((nblk, WINDOW, bk), -1, np.int32)
+        tc_win_arr = np.zeros(nblk, np.int32)
+        tc_cols_arr[vec_blk, slot] = vec_col[tc_vec_idx]
+        tc_win_arr[vec_blk] = tws
+        # per-vector → per-element scatter
+        vec_to_tcrank = np.full(nvec, -1, np.int64)
+        vec_to_tcrank[tc_vec_idx] = np.arange(tc_vec_idx.size)
+        el_rank = vec_to_tcrank[vec_id]
+        sel = el_tc
+        eb = vec_blk[el_rank[sel]]
+        es = slot[el_rank[sel]]
+        tc_vals_arr[eb, subS[sel], es] = valS[sel]
+        tc_pos_arr[eb, subS[sel], es] = posS[sel]
+        np.bitwise_or.at(tc_bits_arr, (eb, es),
+                         np.uint32(1) << subS[sel].astype(np.uint32))
+        blk_atomic = shared[tc_win_arr]
+        tc_blocks_per_win = blocks_per_win
+    else:
+        tc_vals_arr = tc_cols_arr = tc_bits_arr = tc_pos_arr = None
+        tc_win_arr = np.zeros(0, np.int32)
+        blk_atomic = np.zeros(0, bool)
+        tc_blocks_per_win = np.zeros(nwin, np.int64)
+
+    # ---- Stage 3b: residue → row tiles (short/long split, Cs bounded).
+    res_sel = ~el_tc
+    r_rows = rows[order][res_sel]
+    r_cols = colS[res_sel]
+    r_vals = valS[res_sel]
+    r_pos = posS[res_sel]
+    order2 = np.lexsort((r_cols, r_rows))
+    r_rows, r_cols, r_vals, r_pos = (r_rows[order2], r_cols[order2],
+                                     r_vals[order2], r_pos[order2])
+    if r_rows.size:
+        firstr = np.ones(r_rows.size, bool)
+        firstr[1:] = r_rows[1:] != r_rows[:-1]
+        rstart = np.maximum.accumulate(
+            np.where(firstr, np.arange(r_rows.size), 0))
+        rrank = np.arange(r_rows.size) - rstart
+        row_len = np.bincount(r_rows, minlength=a.m)
+        tile_in_row = rrank // ts_tile
+        tslot = rrank % ts_tile
+        tiles_per_row = (row_len + ts_tile - 1) // ts_tile
+        row_tile_off = np.concatenate([[0], np.cumsum(tiles_per_row)])[:-1]
+        el_tile = row_tile_off[r_rows] + tile_in_row
+        ntiles = int(tiles_per_row.sum())
+        t_vals_arr = np.zeros((ntiles, ts_tile), np.float32)
+        t_cols_arr = np.zeros((ntiles, ts_tile), np.int32)
+        t_pos_arr = np.full((ntiles, ts_tile), -1, np.int32)
+        t_vals_arr[el_tile, tslot] = r_vals
+        t_cols_arr[el_tile, tslot] = r_cols
+        t_pos_arr[el_tile, tslot] = r_pos
+        t_row_arr = np.zeros(ntiles, np.int32)
+        t_row_arr[el_tile] = r_rows
+        t_long_arr = row_len[t_row_arr] > balance.short_len
+        tile_atomic = (win_has_tc[t_row_arr // WINDOW]
+                       | (tiles_per_row[t_row_arr] > 1))
+    else:
+        t_vals_arr = None
+        t_row_arr = np.zeros(0, np.int32)
+        t_long_arr = np.zeros(0, bool)
+        tile_atomic = np.zeros(0, bool)
+
+    if len(tc_win_arr):
+        blk_atomic, tile_atomic = propagate_atomicity(
+            tc_win_arr.astype(np.int64), blk_atomic,
+            t_row_arr.astype(np.int64) // WINDOW, tile_atomic)
+
+    if tc_vals_arr is not None:
+        tc = TCBlocks(tc_vals_arr, tc_cols_arr, tc_bits_arr, tc_win_arr,
+                      np.asarray(blk_atomic, bool), tc_nnz, bk,
+                      pos=tc_pos_arr)
+    else:
+        tc = _pad_blocks([], [], [], [], [], 0, bk, pos=[])
+    if t_vals_arr is not None:
+        vpu = VPUTiles(t_vals_arr, t_cols_arr, t_row_arr, t_long_arr,
+                       np.asarray(tile_atomic, bool), vpu_nnz, ts_tile,
+                       pos=t_pos_arr)
+    else:
+        vpu = VPUTiles(np.zeros((1, ts_tile), np.float32),
+                       np.zeros((1, ts_tile), np.int32),
+                       np.zeros(1, np.int32), np.zeros(1, bool),
+                       np.zeros(1, bool), 0, ts_tile,
+                       pos=np.full((1, ts_tile), -1, np.int32))
+
+    meta = {
+        "tc_segments": decompose_counts(tc_blocks_per_win, balance.ts,
+                                        shared),
+        "tc_nnz": tc_nnz,
+        "vpu_nnz": vpu_nnz,
+        "tc_ratio": tc_nnz / max(a.nnz, 1),
+        "has_tc": bool(tc_nnz),
+        "has_vpu": bool(vpu_nnz),
+        "balance": balance,
+    }
+    assert tc_nnz + vpu_nnz == a.nnz, (tc_nnz, vpu_nnz, a.nnz)
+    return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)
+
+
+def _empty_spmm_plan(a, threshold, bk, ts_tile, balance) -> SpMMPlan:
+    tc = _pad_blocks([], [], [], [], [], 0, bk, pos=[])
+    vpu = VPUTiles(np.zeros((1, ts_tile), np.float32),
+                   np.zeros((1, ts_tile), np.int32),
+                   np.zeros(1, np.int32), np.zeros(1, bool),
+                   np.zeros(1, bool), 0, ts_tile,
+                   pos=np.full((1, ts_tile), -1, np.int32))
+    meta = {"tc_segments": None, "tc_nnz": 0, "vpu_nnz": 0, "tc_ratio": 0.0,
+            "has_tc": False, "has_vpu": False, "balance": balance}
+    return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)
+
+
+def _preprocess_spmm_semivectorized(
+    a: SparseCSR,
+    threshold: int = DEFAULT_SPMM_THRESHOLD,
+    bk: int = DEFAULT_BK_SPMM,
+    ts_tile: int = 32,
+    balance: BalanceParams | None = None,
+) -> SpMMPlan:
+    """Previous per-window implementation (kept as a cross-check oracle)."""
+    balance = balance or BalanceParams()
+    wvs = extract_windows(a)
+    nwin = num_windows(a.m)
+
+    blk_vals, blk_cols, blk_bits, blk_win, blk_pos = [], [], [], [], []
+    tc_blocks_per_win = np.zeros(nwin, np.int64)
+    tc_nnz = 0
+    # VPU residue gathered per row.
+    res_cols: list[list[np.ndarray]] = [[] for _ in range(a.m)]
+    res_vals: list[list[np.ndarray]] = [[] for _ in range(a.m)]
+    res_pos: list[list[np.ndarray]] = [[] for _ in range(a.m)]
+    win_has_tc = np.zeros(nwin, bool)
+    win_has_vpu = np.zeros(nwin, bool)
+
+    for w, wv in enumerate(wvs):
+        split = split_spmm_window(wv, threshold)
+        # --- MXU portion: condense selected vectors into 8×bk blocks.
+        sel = split.tc_idx
+        if sel.size:
+            win_has_tc[w] = True
+            tc_nnz += int(wv.counts[sel].sum())
+            for s in range(0, sel.size, bk):
+                part = sel[s : s + bk]
+                v = np.zeros((WINDOW, bk), np.float32)
+                c = np.zeros(bk, np.int32)
+                b = np.zeros(bk, np.uint32)
+                p = np.full((WINDOW, bk), -1, np.int32)
+                v[:, : part.size] = wv.vals[part].T
+                c[: part.size] = wv.cols[part]
+                b[: part.size] = wv.bitmap[part]
+                p[:, : part.size] = wv.pos[part].T
+                blk_vals.append(v)
+                blk_cols.append(c)
+                blk_bits.append(b)
+                blk_pos.append(p)
+                blk_win.append(w)
+                tc_blocks_per_win[w] += 1
+        # --- VPU portion: scatter residual vector elements back to rows.
+        if split.vpu_idx.size:
+            win_has_vpu[w] = True
+            for vi in split.vpu_idx:
+                col = wv.cols[vi]
+                occ = wv.vals[vi]
+                subs = np.nonzero(occ)[0]
+                for sub in subs:
+                    r = w * WINDOW + int(sub)
+                    res_cols[r].append(np.asarray([col], np.int32))
+                    res_vals[r].append(np.asarray([occ[sub]], np.float32))
+                    res_pos[r].append(np.asarray([wv.pos[vi, sub]], np.int32))
+
+    # --- Balance the MXU portion: ≤ Ts blocks per segment.
+    shared = win_has_tc & win_has_vpu
+    tc_seg = decompose_counts(tc_blocks_per_win, balance.ts, shared)
+
+    # --- VPU portion: short/long split + Cs decomposition into tiles.
+    t_vals, t_cols, t_row, t_long, t_pos = [], [], [], [], []
+    vpu_nnz = 0
+    rows_per_win_shared = win_has_tc  # a VPU row is shared if its window has TC work
+    for r in range(a.m):
+        if not res_cols[r]:
+            continue
+        cs_ = np.concatenate(res_cols[r])
+        vs_ = np.concatenate(res_vals[r])
+        ps_ = np.concatenate(res_pos[r])
+        vpu_nnz += vs_.size
+        is_long = vs_.size > balance.short_len
+        for s in range(0, vs_.size, ts_tile):
+            c = np.zeros(ts_tile, np.int32)
+            v = np.zeros(ts_tile, np.float32)
+            p = np.full(ts_tile, -1, np.int32)
+            seg_c, seg_v = cs_[s : s + ts_tile], vs_[s : s + ts_tile]
+            c[: seg_c.size] = seg_c
+            v[: seg_v.size] = seg_v
+            p[: seg_c.size] = ps_[s : s + ts_tile]
+            t_vals.append(v)
+            t_cols.append(c)
+            t_row.append(r)
+            t_long.append(is_long)
+            t_pos.append(p)
+
+    t_row_arr = np.asarray(t_row, np.int64) if t_row else np.zeros(0, np.int64)
+    tile_atomic = np.asarray(
+        [
+            bool(rows_per_win_shared[r // WINDOW])
+            or int((t_row_arr == r).sum()) > 1
+            for r in t_row
+        ],
+        bool,
+    ) if t_row else np.zeros(0, bool)
+
+    blk_atomic = np.asarray(
+        [bool(shared[w]) for w in blk_win], bool
+    ) if blk_win else np.zeros(0, bool)
+    if len(blk_win):
+        blk_atomic, tile_atomic = propagate_atomicity(
+            np.asarray(blk_win) if blk_win else np.zeros(0, np.int64),
+            blk_atomic,
+            t_row_arr // WINDOW,
+            tile_atomic,
+        )
+
+    tc = _pad_blocks(blk_vals, blk_cols, blk_bits, blk_win, blk_atomic, tc_nnz,
+                     bk, pos=blk_pos)
+    if t_vals:
+        vpu = VPUTiles(
+            np.stack(t_vals), np.stack(t_cols),
+            np.asarray(t_row, np.int32), np.asarray(t_long, bool),
+            tile_atomic, vpu_nnz, ts_tile, pos=np.stack(t_pos),
+        )
+    else:
+        vpu = VPUTiles(
+            np.zeros((1, ts_tile), np.float32), np.zeros((1, ts_tile), np.int32),
+            np.zeros(1, np.int32), np.zeros(1, bool), np.zeros(1, bool), 0, ts_tile,
+            pos=np.full((1, ts_tile), -1, np.int32),
+        )
+
+    meta = {
+        "tc_segments": tc_seg,
+        "tc_nnz": tc_nnz,
+        "vpu_nnz": vpu_nnz,
+        "tc_ratio": tc_nnz / max(a.nnz, 1),
+        "has_tc": bool(tc_nnz),
+        "has_vpu": bool(vpu_nnz),
+        "balance": balance,
+    }
+    assert tc_nnz + vpu_nnz == a.nnz, (tc_nnz, vpu_nnz, a.nnz)
+    return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)
+
+
+def preprocess_sddmm(
+    a: SparseCSR,
+    threshold: int = DEFAULT_SDDMM_THRESHOLD,
+    bk: int = DEFAULT_BK_SDDMM,
+    ts_tile: int = 32,
+    balance: BalanceParams | None = None,
+) -> SDDMMPlan:
+    """Block-granularity distribution for SDDMM (densest-first packing)."""
+    balance = balance or BalanceParams()
+    wvs = extract_windows(a)
+    nwin = num_windows(a.m)
+
+    # Canonical (row, col) → nnz-position map, following CSR order.
+    pos_lookup: dict[tuple[int, int], int] = {}
+    rows, cols, _ = a.to_coo()
+    for p, (r, c) in enumerate(zip(rows.tolist(), cols.tolist())):
+        pos_lookup[(r, c)] = p
+
+    blk_cols, blk_bits, blk_win, blk_pos, blk_vals = [], [], [], [], []
+    tc_blocks_per_win = np.zeros(nwin, np.int64)
+    tc_nnz = 0
+    el_rows, el_cols, el_pos = [], [], []
+    win_has_tc = np.zeros(nwin, bool)
+    win_has_vpu = np.zeros(nwin, bool)
+
+    for w, wv in enumerate(wvs):
+        split = split_sddmm_window(wv, threshold, bk)
+        for blk in split.blocks:
+            win_has_tc[w] = True
+            c = np.zeros(bk, np.int32)
+            b = np.zeros(bk, np.uint32)
+            v = np.zeros((WINDOW, bk), np.float32)
+            p = np.full((WINDOW, bk), -1, np.int32)
+            c[: blk.size] = wv.cols[blk]
+            b[: blk.size] = wv.bitmap[blk]
+            v[:, : blk.size] = wv.vals[blk].T
+            for j, vi in enumerate(blk):
+                for sub in np.nonzero(wv.vals[vi])[0]:
+                    p[sub, j] = pos_lookup[(w * WINDOW + int(sub), int(wv.cols[vi]))]
+                    tc_nnz += 1
+            blk_cols.append(c)
+            blk_bits.append(b)
+            blk_vals.append(v)
+            blk_win.append(w)
+            blk_pos.append(p)
+            tc_blocks_per_win[w] += 1
+        for vi in split.vpu_vec_idx:
+            win_has_vpu[w] = True
+            col = int(wv.cols[vi])
+            for sub in np.nonzero(wv.vals[vi])[0]:
+                r = w * WINDOW + int(sub)
+                el_rows.append(r)
+                el_cols.append(col)
+                el_pos.append(pos_lookup[(r, col)])
+
+    shared = win_has_tc & win_has_vpu
+    blk_atomic = np.asarray([bool(shared[w]) for w in blk_win], bool) \
+        if blk_win else np.zeros(0, bool)
+
+    if blk_cols:
+        tc = TCBlocks(
+            np.stack(blk_vals), np.stack(blk_cols), np.stack(blk_bits),
+            np.asarray(blk_win, np.int32), blk_atomic, tc_nnz, bk,
+        )
+        tc_out_pos = np.stack(blk_pos)
+    else:
+        tc = TCBlocks(
+            np.zeros((1, WINDOW, bk), np.float32), np.zeros((1, bk), np.int32),
+            np.zeros((1, bk), np.uint32), np.zeros(1, np.int32),
+            np.zeros(1, bool), 0, bk,
+        )
+        tc_out_pos = np.full((1, WINDOW, bk), -1, np.int32)
+
+    # Element tiles for the VPU path.
+    n_el = len(el_rows)
+    nt = max(1, (n_el + ts_tile - 1) // ts_tile)
+    er = np.zeros((nt, ts_tile), np.int32)
+    ec = np.zeros((nt, ts_tile), np.int32)
+    ep = np.zeros((nt, ts_tile), np.int32)
+    em = np.zeros((nt, ts_tile), bool)
+    if n_el:
+        flat_r = np.asarray(el_rows, np.int32)
+        flat_c = np.asarray(el_cols, np.int32)
+        flat_p = np.asarray(el_pos, np.int32)
+        er.reshape(-1)[:n_el] = flat_r
+        ec.reshape(-1)[:n_el] = flat_c
+        ep.reshape(-1)[:n_el] = flat_p
+        em.reshape(-1)[:n_el] = True
+    vpu = COOTiles(er, ec, ep, em, n_el, ts_tile)
+
+    meta = {
+        "tc_nnz": tc_nnz,
+        "vpu_nnz": n_el,
+        "tc_ratio": tc_nnz / max(a.nnz, 1),
+        "has_tc": bool(tc_nnz),
+        "has_vpu": bool(n_el),
+        "tc_segments": decompose_counts(tc_blocks_per_win, balance.ts, shared),
+        "balance": balance,
+    }
+    assert tc_nnz + n_el == a.nnz
+    return SDDMMPlan(a.m, a.k, a.nnz, threshold, tc, tc_out_pos, vpu, meta)
+
+
+def preprocess_spmm_loop(a: SparseCSR, threshold: int = DEFAULT_SPMM_THRESHOLD,
+                         bk: int = DEFAULT_BK_SPMM, ts_tile: int = 32,
+                         balance: BalanceParams | None = None) -> SpMMPlan:
+    """Scalar-loop baseline (the paper's sequential-CPU comparison point).
+
+    Walks the matrix one element at a time in pure Python — window
+    extraction, vector counting, bitmap building, threshold split, block
+    condensation and residue tiling all scalar. Produces a plan with the
+    same tensors as :func:`preprocess_spmm` (bit-identity tested); used by
+    the preprocessing benchmark to quantify the bulk-vectorized win (the
+    analogue of the paper's GPU-vs-OpenMP 17.1×).
+    """
+    balance = balance or BalanceParams()
+    nwin = num_windows(a.m)
+    # 1) scalar window extraction: (win, col) → [(sub, val, pos)]
+    wincols: list[dict[int, list[tuple[int, float, int]]]] = \
+        [dict() for _ in range(nwin)]
+    p = 0
+    for r in range(a.m):
+        lo, hi = int(a.indptr[r]), int(a.indptr[r + 1])
+        for i in range(lo, hi):
+            c = int(a.indices[i])
+            wincols[r // WINDOW].setdefault(c, []).append(
+                (r % WINDOW, float(a.data[i]), p))
+            p += 1
+
+    blk_vals, blk_cols, blk_bits, blk_win, blk_pos = [], [], [], [], []
+    t_vals, t_cols, t_row, t_long, t_pos = [], [], [], [], []
+    tc_nnz = vpu_nnz = 0
+    for w in range(nwin):
+        tc_sel = []
+        residue: dict[int, list[tuple[int, float, int]]] = {}
+        for c in sorted(wincols[w]):
+            entries = wincols[w][c]
+            if len(entries) >= threshold:
+                tc_sel.append(c)
+                tc_nnz += len(entries)
+            else:
+                for sub, v, pp in entries:
+                    residue.setdefault(w * WINDOW + sub, []).append((c, v, pp))
+                    vpu_nnz += 1
+        for s in range(0, len(tc_sel), bk):
+            part = tc_sel[s : s + bk]
+            v = np.zeros((WINDOW, bk), np.float32)
+            cc = np.zeros(bk, np.int32)
+            bb = np.zeros(bk, np.uint32)
+            ppos = np.full((WINDOW, bk), -1, np.int32)
+            for j, c in enumerate(part):
+                cc[j] = c
+                for sub, val, pp in wincols[w][c]:
+                    v[sub, j] = val
+                    bb[j] |= np.uint32(1) << np.uint32(sub)
+                    ppos[sub, j] = pp
+            blk_vals.append(v)
+            blk_cols.append(cc)
+            blk_bits.append(bb)
+            blk_win.append(w)
+            blk_pos.append(ppos)
+        for r in sorted(residue):
+            ent = residue[r]
+            is_long = len(ent) > balance.short_len
+            for s in range(0, len(ent), ts_tile):
+                seg = ent[s : s + ts_tile]
+                cc = np.zeros(ts_tile, np.int32)
+                vv = np.zeros(ts_tile, np.float32)
+                pp = np.full(ts_tile, -1, np.int32)
+                for j, (c, val, pos_) in enumerate(seg):
+                    cc[j], vv[j], pp[j] = c, val, pos_
+                t_cols.append(cc)
+                t_vals.append(vv)
+                t_pos.append(pp)
+                t_row.append(r)
+                t_long.append(is_long)
+
+    tc = _pad_blocks(blk_vals, blk_cols, blk_bits, blk_win,
+                     [False] * len(blk_win), tc_nnz, bk, pos=blk_pos)
+    if t_vals:
+        vpu = VPUTiles(np.stack(t_vals), np.stack(t_cols),
+                       np.asarray(t_row, np.int32),
+                       np.asarray(t_long, bool),
+                       np.zeros(len(t_row), bool), vpu_nnz, ts_tile,
+                       pos=np.stack(t_pos))
+    else:
+        vpu = VPUTiles(np.zeros((1, ts_tile), np.float32),
+                       np.zeros((1, ts_tile), np.int32),
+                       np.zeros(1, np.int32), np.zeros(1, bool),
+                       np.zeros(1, bool), 0, ts_tile,
+                       pos=np.full((1, ts_tile), -1, np.int32))
+    meta = {"tc_nnz": tc_nnz, "vpu_nnz": vpu_nnz,
+            "tc_ratio": tc_nnz / max(a.nnz, 1), "has_tc": bool(tc_nnz),
+            "has_vpu": bool(vpu_nnz), "balance": balance,
+            "tc_segments": None}
+    return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)

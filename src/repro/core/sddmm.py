@@ -1,0 +1,54 @@
+"""Public hybrid SDDMM: values = sample(X·Yᵀ, sparsity(A)).
+
+Output follows the canonical CSR (row-major, column-sorted) non-zero
+order of the mask matrix, so GNN attention pipelines can chain
+``SDDMM → softmax-by-row → SpMM`` without reindexing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import preprocess
+from repro.core.formats import SDDMMPlan, device_arrays
+from repro.core.spmm import Mode
+from repro.kernels.ops import sddmm_apply
+from repro.sparse.matrix import SparseCSR
+
+
+def threshold_for_mode(mode: Mode, bk: int, threshold: int | None = None) -> int:
+    if mode == "tcu":
+        return 1
+    if mode == "vpu":
+        return 8 * bk + 1  # no block can reach it → element path only
+    return preprocess.DEFAULT_SDDMM_THRESHOLD if threshold is None else threshold
+
+
+class LibraSDDMM:
+    """Preprocess-once, apply-many hybrid SDDMM operator."""
+
+    def __init__(self, a: SparseCSR, mode: Mode = "hybrid",
+                 threshold: int | None = None,
+                 bk: int = preprocess.DEFAULT_BK_SDDMM, ts_tile: int = 32,
+                 balance=None):
+        self.m, self.k = a.shape
+        self.nnz = a.nnz
+        self.mode = mode
+        self.plan: SDDMMPlan = preprocess.preprocess_sddmm(
+            a, threshold_for_mode(mode, bk, threshold), bk=bk, ts_tile=ts_tile,
+            balance=balance,
+        )
+        self.arrays = device_arrays(self.plan)
+        # CSR structure for chaining into softmax/SpMM.
+        self.indptr = np.asarray(a.indptr)
+        self.indices = np.asarray(a.indices)
+
+    def __call__(self, x: jnp.ndarray, y: jnp.ndarray, backend: str = "xla",
+                 interpret: bool = True) -> jnp.ndarray:
+        assert x.shape[0] >= self.m and y.shape[0] >= self.k
+        return sddmm_apply(self.arrays, x, y, nnz=self.nnz, backend=backend,
+                           interpret=interpret)
+
+    @property
+    def tc_ratio(self) -> float:
+        return self.plan.meta["tc_ratio"]

@@ -1,0 +1,61 @@
+"""Public hybrid SpMM: the paper's headline operator, end to end.
+
+Usage::
+
+    op = LibraSpMM(a_csr)            # preprocess once (paper §4.5)
+    c = op(b)                        # reuse every iteration
+    c = op(b, backend="pallas")      # run the TPU kernels (interpret on CPU)
+
+Single-resource ablation modes (paper §5.4.1) are exposed through the
+threshold: ``mode="tcu"`` forces every vector to the MXU path,
+``mode="vpu"`` forces everything to the VPU path, ``mode="hybrid"`` uses
+the 2D-aware distribution.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax.numpy as jnp
+
+from repro.core import preprocess
+from repro.core.formats import WINDOW, SpMMPlan, device_arrays
+from repro.core.windows import num_windows
+from repro.kernels.ops import spmm_apply
+from repro.sparse.matrix import SparseCSR
+
+Mode = Literal["hybrid", "tcu", "vpu"]
+
+
+def threshold_for_mode(mode: Mode, threshold: int | None = None) -> int:
+    if mode == "tcu":
+        return 1  # every non-zero vector passes → MXU-only
+    if mode == "vpu":
+        return WINDOW + 1  # nothing passes → VPU-only
+    return preprocess.DEFAULT_SPMM_THRESHOLD if threshold is None else threshold
+
+
+class LibraSpMM:
+    """Preprocess-once, apply-many hybrid SpMM operator."""
+
+    def __init__(self, a: SparseCSR, mode: Mode = "hybrid",
+                 threshold: int | None = None, bk: int = preprocess.DEFAULT_BK_SPMM,
+                 ts_tile: int = 32, balance=None):
+        self.m, self.k = a.shape
+        self.nwin = num_windows(a.m)
+        self.mode = mode
+        self.plan: SpMMPlan = preprocess.preprocess_spmm(
+            a, threshold_for_mode(mode, threshold), bk=bk, ts_tile=ts_tile,
+            balance=balance,
+        )
+        self.arrays = device_arrays(self.plan)
+
+    def __call__(self, b: jnp.ndarray, backend: str = "xla",
+                 interpret: bool = True) -> jnp.ndarray:
+        assert b.shape[0] == self.k, (b.shape, self.k)
+        return spmm_apply(self.arrays, b, m=self.m, nwin=self.nwin,
+                          backend=backend, interpret=interpret)
+
+    @property
+    def tc_ratio(self) -> float:
+        """Fraction of non-zeros handled by the MXU path (paper Fig. 1)."""
+        return self.plan.meta["tc_ratio"]

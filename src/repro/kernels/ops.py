@@ -1,0 +1,77 @@
+"""Jit'd wrappers around the Pallas kernels + the hybrid combine.
+
+``backend="pallas"`` runs the TPU kernels (interpret mode on CPU — the
+correctness substrate); ``backend="xla"`` runs the pure-jnp oracles from
+:mod:`repro.kernels.ref` (the fast path on CPU and the baseline the
+kernels are validated against). All padding (N → multiple of the lane
+tile, M → multiple of the window) happens here so kernels stay
+hardware-aligned (MXU multiples of 128 lanes / 8 sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import WINDOW
+from repro.kernels import ref
+from repro.kernels.sddmm_mxu import sddmm_mxu
+from repro.kernels.sddmm_vpu import sddmm_vpu
+from repro.kernels.spmm_mxu import spmm_mxu
+from repro.kernels.spmm_vpu import spmm_vpu
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "nwin", "backend", "nt", "interpret")
+)
+def spmm_apply(arrs, b, *, m: int, nwin: int, backend: str = "xla",
+               nt: int = 128, interpret: bool = True):
+    """Hybrid SpMM: C[m, n] = A_sp @ B using a preprocessed Libra plan."""
+    n0 = b.shape[1]
+    if backend == "xla":
+        return ref.spmm_hybrid_ref(arrs, b, m, nwin)
+    b_p = _pad_to(b, 1, nt)
+    tc = spmm_mxu(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_window"], b_p,
+                  nwin=nwin, nt=nt, interpret=interpret)
+    partials = spmm_vpu(arrs["vpu_vals"], arrs["vpu_cols"], b_p, nt=nt,
+                        interpret=interpret)
+    vpu = jax.ops.segment_sum(partials, arrs["vpu_row"], num_segments=m)
+    return tc[:m, :n0] + vpu[:, :n0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nnz", "backend", "kf_tile", "interpret")
+)
+def sddmm_apply(arrs, x, y, *, nnz: int, backend: str = "xla",
+                kf_tile: int = 128, interpret: bool = True):
+    """Hybrid SDDMM: values[nnz] = sample(X @ Yᵀ) in canonical CSR order."""
+    if backend == "xla":
+        return ref.sddmm_hybrid_ref(arrs, _pad_to(x, 0, WINDOW), y, nnz)
+    kf = x.shape[1]
+    kt = min(kf_tile, kf) if kf % kf_tile else kf_tile
+    if kf % kt:
+        x = _pad_to(x, 1, kt)
+        y = _pad_to(y, 1, kt)
+    x_p = _pad_to(x, 0, WINDOW)
+    s_tc = sddmm_mxu(arrs["tc_cols"], arrs["tc_bitmap"], arrs["tc_window"],
+                     x_p, y, kf_tile=kt, interpret=interpret)
+    s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x, y, kf_tile=kt,
+                     interpret=interpret)
+    s_el = jnp.where(arrs["vpu_mask"], s_el, 0.0)
+    out = jnp.zeros((nnz + 1,), s_tc.dtype)
+    pos_tc = jnp.where(arrs["tc_out_pos"] >= 0, arrs["tc_out_pos"], nnz)
+    out = out.at[pos_tc.reshape(-1)].add(s_tc.reshape(-1))
+    pos_el = jnp.where(arrs["vpu_mask"], arrs["vpu_out_pos"], nnz)
+    out = out.at[pos_el.reshape(-1)].add(s_el.reshape(-1))
+    return out[:nnz]

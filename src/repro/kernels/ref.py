@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (and XLA fallback paths).
+
+These define the semantics the kernels must reproduce exactly (allclose):
+
+* TC/MXU SpMM path: per condensed block ``P = vals @ B[cols]`` accumulated
+  into the block's output window.
+* VPU SpMM path: per tile ``p = Σ_j vals[j] · B[cols[j]]`` accumulated into
+  the tile's output row.
+* TC/MXU SDDMM path: per block ``S = X[win] @ Y[cols]ᵀ`` sampled by bitmap.
+* VPU SDDMM path: per element ``s = ⟨X[row], Y[col]⟩``.
+
+The same functions serve as the fast XLA backend on CPU (interpret-mode
+Pallas is a correctness tool, not a CPU performance path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import WINDOW
+
+
+def spmm_tc_ref(tc_vals, tc_cols, tc_window, b, nwin):
+    """(nb,8,bk)×(nb,bk)→ windows of (nwin*8, n)."""
+    gathered = jnp.take(b, tc_cols, axis=0)  # (nb, bk, n)
+    partial = jnp.einsum("bsk,bkn->bsn", tc_vals, gathered)  # (nb, 8, n)
+    out = jax.ops.segment_sum(partial, tc_window, num_segments=nwin)
+    return out.reshape(nwin * WINDOW, b.shape[1])
+
+
+def spmm_vpu_ref(vpu_vals, vpu_cols, vpu_row, b, m):
+    """(nt,ts)×(nt,ts) → rows of (m, n)."""
+    gathered = jnp.take(b, vpu_cols, axis=0)  # (nt, ts, n)
+    partial = jnp.einsum("tj,tjn->tn", vpu_vals, gathered)  # (nt, n)
+    return jax.ops.segment_sum(partial, vpu_row, num_segments=m)
+
+
+def spmm_hybrid_ref(arrs, b, m, nwin):
+    tc = spmm_tc_ref(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_window"], b, nwin)
+    vpu = spmm_vpu_ref(arrs["vpu_vals"], arrs["vpu_cols"], arrs["vpu_row"], b, m)
+    return tc[:m] + vpu
+
+
+def bitmap_mask(bitmap):
+    """(..., bk) uint32 → (..., 8, bk) bool, bit r of column j ⇒ sublane r.
+
+    The TPU-native Bit-Decoding: every sublane tests its own bit of the
+    same 32-bit word (paper Fig. 8's ``(binary >> tid) & 1``).
+    """
+    sub = jnp.arange(WINDOW, dtype=jnp.uint32).reshape(
+        (1,) * (bitmap.ndim - 1) + (WINDOW, 1)
+    )
+    bits = (bitmap[..., None, :] >> sub) & jnp.uint32(1)
+    return bits.astype(jnp.bool_)
+
+
+def sddmm_tc_ref(tc_cols, tc_bitmap, tc_window, x, y):
+    """Block scores: (nb, 8, bk) = X[window] · Y[cols]ᵀ masked by bitmap."""
+    nb = tc_cols.shape[0]
+    xwin = jnp.take(
+        x.reshape(-1, WINDOW, x.shape[-1]), tc_window, axis=0
+    )  # (nb, 8, kf)
+    yg = jnp.take(y, tc_cols, axis=0)  # (nb, bk, kf)
+    s = jnp.einsum("bsk,bjk->bsj", xwin, yg)  # (nb, 8, bk)
+    return jnp.where(bitmap_mask(tc_bitmap), s, 0.0)
+
+
+def sddmm_vpu_ref(rows, cols, mask, x, y):
+    """Element scores: (nt, ts) = ⟨X[row], Y[col]⟩ where mask."""
+    xg = jnp.take(x, rows, axis=0)  # (nt, ts, kf)
+    yg = jnp.take(y, cols, axis=0)
+    s = jnp.einsum("tjk,tjk->tj", xg, yg)
+    return jnp.where(mask, s, 0.0)
+
+
+def sddmm_hybrid_ref(arrs, x, y, nnz):
+    """Hybrid SDDMM producing the canonical nnz-ordered value vector."""
+    s_tc = sddmm_tc_ref(arrs["tc_cols"], arrs["tc_bitmap"], arrs["tc_window"], x, y)
+    s_el = sddmm_vpu_ref(arrs["vpu_rows"], arrs["vpu_cols"], arrs["vpu_mask"], x, y)
+    out = jnp.zeros((nnz + 1,), s_tc.dtype)  # slot nnz swallows -1 padding
+    pos_tc = jnp.where(arrs["tc_out_pos"] >= 0, arrs["tc_out_pos"], nnz)
+    out = out.at[pos_tc.reshape(-1)].add(s_tc.reshape(-1))
+    pos_el = jnp.where(arrs["vpu_mask"], arrs["vpu_out_pos"], nnz)
+    out = out.at[pos_el.reshape(-1)].add(s_el.reshape(-1))
+    return out[:nnz]
+
+
+def revalue_spmm_arrays(arrs, edge_vals):
+    """Rebuild plan value tensors from a runtime per-edge value vector.
+
+    The sparsity pattern (and hence the whole Libra plan) is fixed; only
+    values change — e.g. GNN attention weights per step. ``edge_vals``
+    follows canonical CSR nnz order.
+    """
+    tc_pos, vpu_pos = arrs["tc_pos"], arrs["vpu_pos"]
+    tc_vals = jnp.where(
+        tc_pos >= 0, jnp.take(edge_vals, jnp.maximum(tc_pos, 0)), 0.0
+    ).astype(jnp.float32)
+    vpu_vals = jnp.where(
+        vpu_pos >= 0, jnp.take(edge_vals, jnp.maximum(vpu_pos, 0)), 0.0
+    ).astype(jnp.float32)
+    out = dict(arrs)
+    out["tc_vals"] = tc_vals
+    out["vpu_vals"] = vpu_vals
+    return out
+
+
+def spmm_dense_oracle(a_dense: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.asarray(a_dense, np.float64) @ np.asarray(b, np.float64)
+
+
+def sddmm_dense_oracle(a_dense: np.ndarray, x: np.ndarray, y: np.ndarray):
+    """Full dense S = X·Yᵀ sampled at a_dense's non-zeros → CSR-ordered vals."""
+    s = np.asarray(x, np.float64) @ np.asarray(y, np.float64).T
+    rows, cols = np.nonzero(a_dense)
+    order = np.lexsort((cols, rows))
+    return s[rows[order], cols[order]]

@@ -1,0 +1,70 @@
+"""VPU (CUDA-core analogue) SpMM path as a Pallas TPU kernel.
+
+One grid step processes one residual tile: ``TS`` non-zeros of a single
+output row, computing ``p = Σ_j vals[j] · B[cols[j], :]`` with element-wise
+multiply-accumulate — no MXU, no zero-vector padding redundancy. This is
+the paper's CUDA-core stream: fine-granularity skipping of zeros.
+
+Tiles write *partials*; the deterministic segment-sum combine in ops.py
+plays the role of atomicAdd (only tiles flagged ``atomic`` actually need
+it — short tiles own their row exclusively, mirroring the short/long tile
+split of §4.3, but on TPU the single fused scatter-add is bitwise
+deterministic either way).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cols_ref, vals_ref, b_ref, out_ref, acc_ref):
+    i = pl.program_id(1)  # tile index
+    ts = vals_ref.shape[1]
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(jj, _):
+        # One gathered row × scalar value, accumulated on the VPU.
+        row = cols_ref[i, jj]
+        v = vals_ref[0, jj]
+        acc_ref[...] += v * b_ref[pl.ds(row, 1), :]
+        return ()
+
+    jax.lax.fori_loop(0, ts, body, ())
+    out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("nt", "interpret"))
+def spmm_vpu(vpu_vals, vpu_cols, b, *, nt: int = 128, interpret: bool = True):
+    """Per-tile partial rows, shape ``(ntiles, n)`` (combine via segment_sum).
+
+    Args:
+      vpu_vals: (ntiles, ts) f32 residual non-zero values (zero padded).
+      vpu_cols: (ntiles, ts) i32 column of each value (0 where padded).
+      b: (k, n) dense matrix; n must be a multiple of ``nt``.
+    """
+    ntiles, _ = vpu_vals.shape
+    k, n = b.shape
+    assert n % nt == 0, (n, nt)
+    grid = (n // nt, ntiles)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, vpu_vals.shape[1]), lambda j, i, c: (i, 0)),
+                pl.BlockSpec((k, nt), lambda j, i, c: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, nt), lambda j, i, c: (i, j)),
+            scratch_shapes=[pltpu.VMEM((1, nt), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((ntiles, n), jnp.float32),
+        interpret=interpret,
+    )(vpu_cols, vpu_vals, b)
+    return out

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (MUST precede any jax import: jax locks device count on first init.)
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the whole step),
+  * the program fits (memory_analysis),
+  * and extracts the roofline terms (cost_analysis + HLO collectives).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<arch>_<shape>_<mesh>.json.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch import flops as F
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.config import ALL_SHAPES, ArchConfig, InputShape
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# Gradient-accumulation microbatches for train_4k so the per-device
+# working set fits a 16 GB v5e HBM (validated via memory_analysis):
+# one microbatch of activations lives at a time; grads accumulate in f32.
+DEFAULT_MICROBATCHES = {
+    "minitron_8b": 4, "gemma2_9b": 4, "glm4_9b": 4, "granite_34b": 16,
+    "qwen3_moe_235b_a22b": 8, "moonshot_v1_16b_a3b": 8, "whisper_tiny": 1,
+    "qwen2_vl_7b": 8, "mamba2_130m": 1, "zamba2_7b": 4,
+}
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> str | None:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return "skip(quadratic): full-attention arch at 500k context"
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    if shape.kind == "train" or shape.kind == "prefill":
+        return api.train_input_specs(cfg, shape)
+    return api.decode_input_specs(cfg, shape)
+
+
+def lower_cell(cfg: ArchConfig, shape: InputShape, mesh,
+               microbatches: int = 1, donate: bool = True):
+    """Returns (lowered, kind)."""
+    if shape.kind in ("train", "prefill"):
+        # prefill lowers the forward pass only (inference); train lowers
+        # the full step (grad + optimizer).
+        specs = api.train_input_specs(cfg, shape)
+        params_abs = jax.eval_shape(
+            lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+        p_sh = ts.sh.param_shardings(mesh, params_abs)
+        b_sh = ts.sh.batch_shardings(mesh, specs)
+        if shape.kind == "prefill":
+            def fwd(params, batch):
+                with ts.sh.activation_context(mesh, ts.sh.dp_only_of(cfg)):
+                    logits, _ = api.forward_logits(params, batch, cfg)
+                return logits
+
+            fn = jax.jit(fwd, in_shardings=(p_sh, b_sh))
+            return fn.lower(params_abs, specs), "prefill"
+        opt_cfg = opt_lib.OptConfig()
+        opt_abs = jax.eval_shape(
+            lambda p: opt_lib.init_opt_state(p, opt_cfg), params_abs)
+        step = ts.make_train_step(cfg, opt_cfg, mesh,
+                                  microbatches=microbatches)
+        (p_sh2, o_sh, b_sh2), out_sh = ts.shardings_for_train(
+            mesh, params_abs, opt_abs, specs,
+            replicate_params=cfg.replicate_params)
+        fn = jax.jit(step, in_shardings=(p_sh2, o_sh, b_sh2),
+                     out_shardings=out_sh,
+                     donate_argnums=(0, 1) if donate else ())
+        return fn.lower(params_abs, opt_abs, specs), "train"
+    # decode
+    specs = api.decode_input_specs(cfg, shape)
+    params_abs = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    serve = ts.make_serve_step(cfg, mesh)
+    in_sh, out_sh = ts.shardings_for_serve(
+        mesh, params_abs, specs["cache"], specs["token"],
+        sample=cfg.serve_sample, replicate_params=cfg.replicate_params)
+    fn = jax.jit(serve, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(1,) if donate else ())
+    return fn.lower(params_abs, specs["cache"], specs["token"],
+                    specs["cache_len"]), "decode"
+
+
+def _apply_overrides(cfg, overrides: dict | None):
+    if not overrides:
+        return cfg
+    import dataclasses
+
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            typed[k] = v.lower() in ("1", "true", "yes") if isinstance(v, str) else bool(v)
+        elif isinstance(cur, int):
+            typed[k] = int(v)
+        elif isinstance(cur, float):
+            typed[k] = float(v)
+        else:
+            typed[k] = v
+    return dataclasses.replace(cfg, **typed)
+
+
+def run_cell(arch: str, shape: InputShape, multi_pod: bool,
+             microbatches: int = 1, save: bool = True,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    cfg = _apply_overrides(get_config(arch), overrides)
+    mesh_name = ("multi" if multi_pod else "single") + (f"_{tag}" if tag else "")
+    cell = {"arch": arch, "shape": shape.name, "mesh": mesh_name}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        cell["status"] = reason
+        if save:
+            _save(cell)
+        return cell
+    t0 = time.time()
+    if microbatches == 1 and shape.kind == "train":
+        microbatches = DEFAULT_MICROBATCHES.get(arch, 1)
+    cell["microbatches"] = microbatches
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        with mesh:
+            lowered, kind = lower_cell(cfg, shape, mesh,
+                                       microbatches=microbatches)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        mf = F.model_flops(cfg, shape)
+        hlo_text = compiled.as_text()
+        if save:
+            import gzip
+
+            os.makedirs(OUT_DIR, exist_ok=True)
+            hlo_path = os.path.join(
+                OUT_DIR, f"{arch}_{shape.name}_{mesh_name}.hlo.gz")
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(hlo_text)
+        stats = H.analyze_hlo(hlo_text)
+        rl = H.roofline_from_stats(stats, model_flops_global=mf,
+                                   n_chips=n_chips)
+        ca = compiled.cost_analysis()
+        cell.update(
+            status="ok",
+            kind=kind,
+            compile_s=round(time.time() - t0, 1),
+            n_chips=n_chips,
+            bytes_per_device={
+                "arguments": int(mem.argument_size_in_bytes),
+                "output": int(mem.output_size_in_bytes),
+                "temp": int(mem.temp_size_in_bytes),
+                "alias": int(mem.alias_size_in_bytes),
+                "peak_live": int(mem.argument_size_in_bytes
+                                 + mem.temp_size_in_bytes),
+            },
+            roofline=rl.as_dict(),
+            collectives={k: int(v) for k, v in stats.coll_op_bytes.items()},
+            collective_count=stats.coll_count,
+            xla_cost_analysis={
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+            params=F.count_params(cfg),
+        )
+    except Exception as exc:  # lower/compile failure = a bug in the system
+        cell["status"] = f"FAIL: {type(exc).__name__}: {exc}"
+        cell["traceback"] = traceback.format_exc()[-2000:]
+    if save:
+        _save(cell)
+    return cell
+
+
+def _save(cell: dict) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{cell['arch']}_{cell['shape']}_{cell['mesh']}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(cell, f, indent=1)
+
+
+def reanalyze_saved() -> None:
+    """Re-run the HLO analysis on saved .hlo.gz artifacts (no recompile)."""
+    import glob
+    import gzip
+
+    for hp in sorted(glob.glob(os.path.join(OUT_DIR, "*.hlo.gz"))):
+        jp = hp.replace(".hlo.gz", ".json")
+        if not os.path.exists(jp):
+            continue
+        with open(jp) as f:
+            cell = json.load(f)
+        if not str(cell.get("status", "")).startswith("ok"):
+            continue
+        cfg = get_config(cell["arch"])
+        shape = next(s for s in ALL_SHAPES if s.name == cell["shape"])
+        with gzip.open(hp, "rt") as f:
+            text = f.read()
+        stats = H.analyze_hlo(text)
+        rl = H.roofline_from_stats(stats,
+                                   model_flops_global=F.model_flops(cfg, shape),
+                                   n_chips=cell["n_chips"])
+        cell["roofline"] = rl.as_dict()
+        cell["collectives"] = {k: int(v)
+                               for k, v in stats.coll_op_bytes.items()}
+        cell["collective_count"] = stats.coll_count
+        with open(jp, "w") as f:
+            json.dump(cell, f, indent=1)
+        r = cell["roofline"]
+        print(f"[reanalyze] {cell['arch']} {cell['shape']} {cell['mesh']}: "
+              f"bott={r['bottleneck']} c={r['compute_s']:.3e} "
+              f"m={r['memory_s']:.3e} l={r['collective_s']:.3e}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override key=value (repeatable)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file (perf iterations)")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze_saved()
+        return
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = [s for s in ALL_SHAPES
+              if args.shape in (None, s.name)] if not args.shape else \
+        [s for s in ALL_SHAPES if s.name == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                out = os.path.join(
+                    OUT_DIR, f"{arch}_{shape.name}_{mesh_name}.json")
+                if args.skip_existing and os.path.exists(out):
+                    with open(out) as f:
+                        prev = json.load(f)
+                    if str(prev.get("status", "")).startswith(("ok", "skip")):
+                        print(f"[dryrun] cached {arch} {shape.name} {mesh_name}")
+                        continue
+                cell = run_cell(arch, shape, mp,
+                                microbatches=args.microbatches,
+                                overrides=overrides, tag=args.tag)
+                status = cell["status"].splitlines()[0]
+                rl = cell.get("roofline", {})
+                extra = ""
+                if rl:
+                    extra = (f" bott={rl['bottleneck']}"
+                             f" c={rl['compute_s']:.3e}s"
+                             f" m={rl['memory_s']:.3e}s"
+                             f" l={rl['collective_s']:.3e}s"
+                             f" useful={rl['useful_ratio']:.2f}")
+                print(f"[dryrun] {arch} {shape.name} {mesh_name}: "
+                      f"{status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.config import ArchConfig, InputShape, ALL_SHAPES

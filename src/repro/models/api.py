@@ -1,0 +1,110 @@
+"""Family-dispatching model API: init / forward / loss / cache / decode.
+
+Every architecture family exposes the same four entry points so the
+launcher, dry-run, and trainer are arch-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hybrid, mamba2, moe, transformer, whisper
+from repro.models.config import ArchConfig, InputShape
+
+Params = Any
+
+
+def init_params(rng, cfg: ArchConfig) -> Params:
+    if cfg.family == "moe":
+        return moe.init_params(rng, cfg)
+    if cfg.family == "ssm":
+        return mamba2.init_params(rng, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.init_params(rng, cfg)
+    if cfg.family == "audio":
+        return whisper.init_params(rng, cfg)
+    return transformer.init_params(rng, cfg)  # dense + vlm
+
+
+def forward_logits(params, batch: dict, cfg: ArchConfig):
+    """Returns (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    if cfg.family == "moe":
+        return moe.forward(params, tokens, cfg)
+    if cfg.family == "ssm":
+        return mamba2.forward(params, tokens, cfg), 0.0
+    if cfg.family == "hybrid":
+        return hybrid.forward(params, tokens, cfg), 0.0
+    if cfg.family == "audio":
+        return whisper.forward(params, tokens, cfg,
+                               frame_embeds=batch["frame_embeds"]), 0.0
+    if cfg.family == "vlm":
+        return transformer.forward(params, tokens, cfg,
+                                   patch_embeds=batch.get("patch_embeds")), 0.0
+    return transformer.forward(params, tokens, cfg), 0.0
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig):
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, aux = forward_logits(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + cfg.router_aux_coef * aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family == "moe":
+        return moe.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        return mamba2.init_cache(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, batch, max_len, dtype)
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(params, cache, token, cache_len, cfg: ArchConfig):
+    if cfg.family == "moe":
+        return moe.decode_step(params, cache, token, cache_len, cfg)
+    if cfg.family == "ssm":
+        return mamba2.decode_step(params, cache, token, cache_len, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.decode_step(params, cache, token, cache_len, cfg)
+    if cfg.family == "audio":
+        return whisper.decode_step(params, cache, token, cache_len, cfg)
+    return transformer.decode_step(params, cache, token, cache_len, cfg)
+
+
+# ------------------------------------------------------------ input specs --
+def train_input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for one global train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "audio":
+        specs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_ctx, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches or 256, cfg.d_model), jnp.float32)
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Stand-ins for one decode step with a cache of seq_len history."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, dtype=jnp.bfloat16))
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }

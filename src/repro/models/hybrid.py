@@ -1,0 +1,171 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+The same attention+MLP parameter set is applied after every
+``hybrid_attn_every`` mamba layers (zamba2's shared transformer block).
+Attention uses a sliding window so the arch stays sub-quadratic and is
+eligible for long_500k (window ≥ train seq_len ⇒ exact at 4k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.config import ArchConfig
+
+
+def _group_counts(cfg: ArchConfig) -> tuple[int, int]:
+    every = cfg.hybrid_attn_every
+    ngroups = cfg.n_layers // every
+    tail = cfg.n_layers - ngroups * every
+    return ngroups, tail
+
+
+def init_params(rng, cfg: ArchConfig):
+    ke, km, kt, ka, kmm = jax.random.split(rng, 5)
+    ngroups, tail = _group_counts(cfg)
+    every = cfg.hybrid_attn_every
+
+    def init_group(r):
+        return jax.vmap(lambda rr: mamba2.init_layer(rr, cfg))(
+            jax.random.split(r, every))
+
+    groups = jax.vmap(init_group)(jax.random.split(km, ngroups))
+    p = {
+        "embed": L.init_embedding(ke, cfg),
+        "groups": groups,  # (ngroups, every, ...)
+        "shared_attn": {
+            "attn_norm": L.init_norm(cfg),
+            "attn": L.init_attention(ka, cfg),
+            "mlp_norm": L.init_norm(cfg),
+            "mlp": L.init_mlp(kmm, cfg),
+        },
+        "final_norm": L.init_norm(cfg),
+    }
+    if tail:
+        p["tail"] = jax.vmap(lambda rr: mamba2.init_layer(rr, cfg))(
+            jax.random.split(kt, tail))
+    return p
+
+
+def _shared_attn_block(sp, x, cfg: ArchConfig):
+    s = x.shape[1]
+    window = jnp.int32(min(cfg.sliding_window, s + 1))
+    h = L.rms_norm(x, sp["attn_norm"]["scale"], cfg.norm_eps)
+    h = L.attention_block(sp["attn"], h, cfg, layer_window=window)
+    x = x + h
+    h = L.rms_norm(x, sp["mlp_norm"]["scale"], cfg.norm_eps)
+    return x + L.mlp_block(sp["mlp"], h, cfg)
+
+
+def forward(params, tokens, cfg: ArchConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    sp = params["shared_attn"]
+
+    def group_fn(gp, x):
+        def inner(carry, lp):
+            return mamba2.apply_layer(lp, carry, cfg), None
+
+        x, _ = jax.lax.scan(inner, x, gp)
+        return _shared_attn_block(sp, x, cfg)
+
+    if cfg.remat:
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def outer(carry, gp):
+        return group_fn(gp, carry), None
+
+    x, _ = jax.lax.scan(outer, x, params["groups"])
+    if "tail" in params:
+        def inner_t(carry, lp):
+            return mamba2.apply_layer(lp, carry, cfg), None
+
+        x, _ = jax.lax.scan(inner_t, x, params["tail"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg)
+
+
+# ------------------------------------------------------------- decoding ---
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Mamba states for every layer + sliding-window KV per attn application."""
+    ngroups, tail = _group_counts(cfg)
+    every = cfg.hybrid_attn_every
+    d_in, h, p, n = mamba2._dims(cfg)
+    kv, hd = cfg.n_kv, cfg.head_dim
+    k = cfg.ssm_conv - 1
+    wlen = min(cfg.sliding_window, max_len)
+    cache = {
+        "g_state": jnp.zeros((ngroups, every, batch, h, p, n), jnp.float32),
+        "g_conv_x": jnp.zeros((ngroups, every, batch, k, d_in), dtype),
+        "g_conv_bc": jnp.zeros((ngroups, every, batch, k, 2 * n), dtype),
+        "attn_k": jnp.zeros((ngroups, batch, wlen, kv, hd), dtype),
+        "attn_v": jnp.zeros((ngroups, batch, wlen, kv, hd), dtype),
+    }
+    if tail:
+        cache["t_state"] = jnp.zeros((tail, batch, h, p, n), jnp.float32)
+        cache["t_conv_x"] = jnp.zeros((tail, batch, k, d_in), dtype)
+        cache["t_conv_bc"] = jnp.zeros((tail, batch, k, 2 * n), dtype)
+    return cache
+
+
+def decode_step(params, cache, token, cache_len, cfg: ArchConfig):
+    """One-token decode; attention caches are ring buffers of the window."""
+    x = L.embed(params["embed"], token, cfg)
+    sp = params["shared_attn"]
+    wlen = cache["attn_k"].shape[2]
+    pos = (cache_len - 1) * jnp.ones((x.shape[0], 1), jnp.int32)
+    slot = (cache_len - 1) % wlen  # ring-buffer slot
+
+    def group_body(carry, inp):
+        x = carry
+        gp, gst, gtx, gtbc, kc, vc = inp
+
+        def inner(c2, inp2):
+            lp, st, tx, tbc = inp2
+            y, st2, tx2, tbc2 = mamba2.decode_layer(lp, c2, st, tx, tbc, cfg)
+            return y, (st2, tx2, tbc2)
+
+        x, (st_new, tx_new, tbc_new) = jax.lax.scan(inner, x, (gp, gst, gtx, gtbc))
+        # Shared attention with ring-buffer sliding window.
+        h = L.rms_norm(x, sp["attn_norm"]["scale"], cfg.norm_eps)
+        q, k2, v2 = L.qkv_project(sp["attn"], h, cfg)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k2 = L.apply_rope(k2, pos, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k2.astype(kc.dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v2.astype(vc.dtype),
+                                          (0, slot, 0, 0))
+        filled = jnp.minimum(cache_len, wlen)
+        # Ring buffer: all filled slots are within the window by construction.
+        o = L.decode_attention(q, kc, vc, filled,
+                               softcap_val=cfg.attn_softcap)
+        cd = L.dtype_of(cfg, "compute_dtype")
+        x = x + (o.reshape(o.shape[0], 1, -1) @ sp["attn"]["wo"].astype(cd))
+        h = L.rms_norm(x, sp["mlp_norm"]["scale"], cfg.norm_eps)
+        x = x + L.mlp_block(sp["mlp"], h, cfg)
+        return x, (st_new, tx_new, tbc_new, kc, vc)
+
+    x, (gs, gtx, gtbc, ak, av) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["g_state"], cache["g_conv_x"],
+         cache["g_conv_bc"], cache["attn_k"], cache["attn_v"]))
+    new_cache = dict(cache, g_state=gs, g_conv_x=gtx, g_conv_bc=gtbc,
+                     attn_k=ak, attn_v=av)
+    if "tail" in params:
+        def inner_t(c2, inp2):
+            lp, st, tx, tbc = inp2
+            y, st2, tx2, tbc2 = mamba2.decode_layer(lp, c2, st, tx, tbc, cfg)
+            return y, (st2, tx2, tbc2)
+
+        x, (ts, ttx, ttbc) = jax.lax.scan(
+            inner_t, x, (params["tail"], cache["t_state"],
+                         cache["t_conv_x"], cache["t_conv_bc"]))
+        new_cache["t_state"] = ts
+        new_cache["t_conv_x"] = ttx
+        new_cache["t_conv_bc"] = ttbc
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), new_cache

@@ -1,0 +1,266 @@
+"""Shared pure-JAX layers: norms, RoPE/M-RoPE, flash attention, MLPs.
+
+Parameters are nested dicts of jnp arrays; every layer is a pair of
+``init_*(rng, cfg) -> params`` and ``apply`` functions. Layer stacks are
+scanned (stacked params) so HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as sh
+from repro.models.config import ArchConfig
+
+
+def dtype_of(cfg: ArchConfig, which: str):
+    return jnp.dtype(getattr(cfg, which))
+
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ----------------------------------------------------------------- RoPE ---
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), x.dtype)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :].astype(x.dtype)  # (..., S, 1, d/2)
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL M-RoPE: rotary dims split into (t, h, w) sections, each
+    rotated by its own position stream. positions3: (3, ..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    # Section id per rotary frequency index.
+    sec = np.zeros(half, np.int32)
+    start = 0
+    for si, width in enumerate(np.asarray(sections) * half // int(np.sum(sections))):
+        sec[start : start + width] = si
+        start += width
+    sec[start:] = len(sections) - 1
+    sec = jnp.asarray(sec)
+    pos = jnp.take(positions3, sec, axis=0)  # (half, ..., S) per-freq position
+    pos = jnp.moveaxis(pos, 0, -1)  # (..., S, half)
+    ang = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ------------------------------------------------------ flash attention ---
+def flash_attention(q, k, v, *, causal: bool, window=None,
+                    softcap_val: float = 0.0, chunk: int = 1024,
+                    q_offset=0, remat_chunks: bool = True):
+    """Chunked-KV attention with online softmax (memory O(S·chunk)).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0. ``window``
+    (static or traced int) restricts keys to within `window` of the query;
+    pass a value > Sk (or None) to disable. ``q_offset`` is the absolute
+    position of q[0] (decode / prefix chunks).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    if window is None:
+        window = sk + sq + 1
+    # TP: repeat KV heads so the kv dim divides the model axis (GQA groups
+    # absorb the repetition); keeps every attention tensor head-sharded.
+    rep = sh.kv_repeat_for_tp(kv, h)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        kv = kv * rep
+    g = h // kv
+    q = sh.constrain(q, "batch", None, "model", None)
+    k = sh.constrain(k, "batch", None, "model", None)
+    v = sh.constrain(v, "batch", None, "model", None)
+    qh = q.reshape(b, sq, kv, g, d)
+    scale = 1.0 / np.sqrt(d)
+    nchunks = (sk + chunk - 1) // chunk
+    sk_pad = nchunks * chunk
+    if sk_pad != sk:
+        pad = [(0, 0), (0, sk_pad - sk), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(b, nchunks, chunk, kv, d)
+    vc = v.reshape(b, nchunks, chunk, kv, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        idx, kb, vb = inputs  # kb/vb: (b, chunk, kv, d)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qh, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = sh.constrain(s, "batch", "model", None, None, None)
+        s = softcap(s, softcap_val)
+        mask = (k_pos[None, :] <= sk - 1)[None, None, None]  # valid keys
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])[None, None, None]
+        # window may be traced (gemma2 alternation); window > S disables it.
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)[None, None, None]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, d), jnp.float32)
+    # remat_chunks: recompute the (b,kv,g,sq,chunk) score tensor in the
+    # backward pass instead of stacking one per chunk into HBM — the
+    # flash-attention memory contract under autodiff (§Perf iteration 2).
+    body_fn = jax.checkpoint(body) if remat_chunks else body
+    (m, l, acc), _ = jax.lax.scan(
+        body_fn, (m0, l0, a0),
+        (jnp.arange(nchunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d)  # (b,kv,g,sq,d)→(b,sq,h,d)
+    out = sh.constrain(out, "batch", None, "model", None)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     softcap_val: float = 0.0):
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); cache_len: scalar or (B,) valid
+    length (the new token is at index cache_len-1).
+    """
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qh = q.reshape(b, kv, g, d)
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, softcap_val)
+    pos = jnp.arange(s)
+    if window is None:
+        window = s + 1
+    last = jnp.asarray(cache_len - 1)
+    valid = pos[None] <= last[..., None] if last.ndim else pos <= last
+    lo = last - window
+    valid = valid & (pos[None] > lo[..., None] if last.ndim else pos > lo)
+    scores = jnp.where(valid[:, None, None, :] if last.ndim else valid[None, None, None, :],
+                       scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------- attention --
+def init_attention(rng, cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    pd = dtype_of(cfg, "param_dtype")
+    sc = 1.0 / np.sqrt(d)
+    return {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * sc).astype(pd),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * sc).astype(pd),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * sc).astype(pd),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * (1.0 / np.sqrt(h * hd))).astype(pd),
+    }
+
+
+def qkv_project(p, x, cfg: ArchConfig):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    cd = dtype_of(cfg, "compute_dtype")
+    q = (x @ p["wq"].astype(cd)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(b, s, kv, hd)
+    return q, k, v
+
+
+def attention_block(p, x, cfg: ArchConfig, *, layer_window: int = 0,
+                    positions=None, positions3=None):
+    """Full self-attention block (projections + rope + flash + output)."""
+    b, s, _ = x.shape
+    q, k, v = qkv_project(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if cfg.mrope and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = flash_attention(q, k, v, causal=True, window=layer_window,
+                          softcap_val=cfg.attn_softcap, chunk=cfg.attn_chunk,
+                          remat_chunks=cfg.flash_remat)
+    cd = dtype_of(cfg, "compute_dtype")
+    return out.reshape(b, s, -1) @ p["wo"].astype(cd)
+
+
+# ------------------------------------------------------------------ MLP ---
+def init_mlp(rng, cfg: ArchConfig, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    pd = dtype_of(cfg, "param_dtype")
+    return {
+        "wi_gate": (jax.random.normal(k1, (d, f)) / np.sqrt(d)).astype(pd),
+        "wi_up": (jax.random.normal(k2, (d, f)) / np.sqrt(d)).astype(pd),
+        "wo": (jax.random.normal(k3, (f, d)) / np.sqrt(f)).astype(pd),
+    }
+
+
+def mlp_block(p, x, cfg: ArchConfig):
+    cd = dtype_of(cfg, "compute_dtype")
+    g = jax.nn.silu(x @ p["wi_gate"].astype(cd))
+    u = x @ p["wi_up"].astype(cd)
+    h = sh.constrain(g * u, "batch", None, "model")
+    return sh.constrain(h @ p["wo"].astype(cd), "batch", None, None)
+
+
+def init_norm(cfg: ArchConfig):
+    return {"scale": jnp.zeros((cfg.d_model,), dtype_of(cfg, "param_dtype"))}
+
+
+def init_embedding(rng, cfg: ArchConfig):
+    pd = dtype_of(cfg, "param_dtype")
+    emb = jax.random.normal(
+        rng, (cfg.vocab_padded, cfg.d_model)) / np.sqrt(cfg.d_model)
+    return {"embedding": emb.astype(pd)}
+
+
+def embed(p, tokens, cfg: ArchConfig):
+    cd = dtype_of(cfg, "compute_dtype")
+    return jnp.take(p["embedding"], tokens, axis=0).astype(cd)
+
+
+def unembed(p, x, cfg: ArchConfig):
+    cd = dtype_of(cfg, "compute_dtype")
+    logits = x @ p["embedding"].astype(cd).T
+    logits = logits[..., : cfg.vocab]  # drop padded vocab slots
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)

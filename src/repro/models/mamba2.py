@@ -1,0 +1,249 @@
+"""Mamba2 (SSD — state-space duality) in pure JAX, chunked scan.
+
+Implements the quadratic-intra-chunk / linear-inter-chunk SSD algorithm
+(arXiv:2405.21060): sequence cut into chunks of Q tokens; within a chunk
+the recurrence is an attention-like masked matmul (MXU-friendly), across
+chunks a tiny scan carries the (H, P, N) state. Linear in sequence length
+⇒ eligible for long_500k.
+
+Sharding: projections are kept *separate* (wz/wx/wb/wc/wdt) so each output
+is individually shardable — the SSD head dimension H goes on the ``model``
+axis when divisible (zamba2: 112 heads / 16 = 7), otherwise the constraint
+sanitizer degrades to replication and small models run dp_only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_d_inner
+    h = cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    return d_in, h, p, n
+
+
+def init_layer(rng, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(rng, 6)
+    pd = L.dtype_of(cfg, "param_dtype")
+    sc = 1.0 / np.sqrt(d)
+    return {
+        "norm": L.init_norm(cfg),
+        "wz": (jax.random.normal(k1, (d, d_in)) * sc).astype(pd),
+        "wx": (jax.random.normal(k2, (d, d_in)) * sc).astype(pd),
+        "wb": (jax.random.normal(k3, (d, n)) * sc).astype(pd),
+        "wc": (jax.random.normal(k4, (d, n)) * sc).astype(pd),
+        "wdt": (jax.random.normal(k5, (d, h)) * sc).astype(pd),
+        "conv_x": (jax.random.normal(k6, (d_in, cfg.ssm_conv)) * 0.1).astype(pd),
+        "conv_b": (jnp.zeros((n, cfg.ssm_conv))).astype(pd),
+        "conv_c": (jnp.zeros((n, cfg.ssm_conv))).astype(pd),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": {"scale": jnp.zeros((d_in,), pd)},
+        "out_proj": (jax.random.normal(k1, (d_in, d)) / np.sqrt(d_in)).astype(pd),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B, S, C), w (C, K)."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(
+        xp[:, i : i + x.shape[1], :] * w[None, None, :, i] for i in range(k)
+    )  # K=4: XLA fuses the unrolled sum
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = Σ_{j<t≤i} x[..., t] (−inf j>i)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh, dt, a, b_in, c_in, chunk: int):
+    """Chunked SSD. xh: (B,S,H,P), dt: (B,S,H), a: (H,) (negative),
+    b_in/c_in: (B,S,N). Returns y (B,S,H,P) and final state (B,H,P,N)."""
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xc = xh.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b_in.reshape(bsz, nc, q, n)
+    cc = c_in.reshape(bsz, nc, q, n)
+
+    da = dtc * a  # (B,nc,Q,H)
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # Intra-chunk (quadratic in Q, MXU matmuls).
+    lmat = jnp.exp(_segsum(jnp.moveaxis(da, 2, 3)))  # (B,nc,H,Q,Q)
+    lmat = constrain(lmat, "batch", None, "model", None, None)
+    scores = jnp.einsum("bcin,bcjn,bchij->bchij", cc, bc, lmat)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # Chunk summary states: (B,nc,H,P,N)
+    decay_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", dtc * decay_end, xc, bc)
+    states = constrain(states, "batch", None, "model", None, None)
+
+    # Inter-chunk linear recurrence.
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # (B,nc,H)
+
+    def body(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N)
+
+    in_decay = jnp.exp(da_cs)  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cc, in_decay,
+                         prev_states.astype(cc.dtype))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final
+
+
+def _project(lp, x, cfg: ArchConfig):
+    """Split projections with per-tensor sharding constraints."""
+    d_in, h, p, n = _dims(cfg)
+    cd = L.dtype_of(cfg, "compute_dtype")
+    z = constrain(x @ lp["wz"].astype(cd), "batch", None, "model")
+    xr = constrain(x @ lp["wx"].astype(cd), "batch", None, "model")
+    b_in = x @ lp["wb"].astype(cd)
+    c_in = x @ lp["wc"].astype(cd)
+    dt = constrain(x @ lp["wdt"].astype(cd), "batch", None, "model")
+    return z, xr, b_in, c_in, dt
+
+
+def apply_layer(lp, x, cfg: ArchConfig, layer_idx=None):
+    """x: (B,S,D) → (B,S,D). Full (train/prefill) pass."""
+    del layer_idx
+    d_in, h, p, n = _dims(cfg)
+    cd = L.dtype_of(cfg, "compute_dtype")
+    res = x
+    x = L.rms_norm(x, lp["norm"]["scale"], cfg.norm_eps)
+    z, xr, b_in, c_in, dt = _project(lp, x, cfg)
+    xr = jax.nn.silu(_causal_conv(xr, lp["conv_x"].astype(cd)))
+    b_in = jax.nn.silu(_causal_conv(b_in, lp["conv_b"].astype(cd)))
+    c_in = jax.nn.silu(_causal_conv(c_in, lp["conv_c"].astype(cd)))
+    xh = xr.reshape(*x.shape[:2], h, p)
+    xh = constrain(xh, "batch", None, "model", None)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"])
+    y, _ = ssd_scan(xh.astype(jnp.float32), dt_sp, a,
+                    b_in.astype(jnp.float32), c_in.astype(jnp.float32),
+                    cfg.ssm_chunk)
+    y = y + lp["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = constrain(y, "batch", None, "model", None)
+    y = y.reshape(*x.shape[:2], d_in).astype(cd)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"]["scale"], cfg.norm_eps)
+    out = res + y @ lp["out_proj"].astype(cd)
+    return constrain(out, "batch", None, None)
+
+
+def init_params(rng, cfg: ArchConfig):
+    ke, kl = jax.random.split(rng)
+    stacked = jax.vmap(lambda r: init_layer(r, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    return {
+        "embed": L.init_embedding(ke, cfg),
+        "layers": stacked,
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def forward(params, tokens, cfg: ArchConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    layer_fn = functools.partial(apply_layer, cfg=cfg)
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, lp):
+        return layer_fn(lp, carry), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg)
+
+
+# ------------------------------------------------------------- decoding ---
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0, dtype=jnp.float32):
+    """SSM cache: per-layer recurrent state + conv tails (O(1) in seq len)."""
+    d_in, h, p, n = _dims(cfg)
+    k = cfg.ssm_conv - 1
+    return {
+        "state": jnp.zeros((cfg.n_layers, batch, h, p, n), jnp.float32),
+        "conv_x": jnp.zeros((cfg.n_layers, batch, k, d_in), dtype),
+        "conv_bc": jnp.zeros((cfg.n_layers, batch, k, 2 * n), dtype),
+    }
+
+
+def decode_layer(lp, x, state, tail_x, tail_bc, cfg: ArchConfig):
+    """One-token step. x: (B,1,D). Returns (y, state', tails')."""
+    d_in, h, p, n = _dims(cfg)
+    cd = L.dtype_of(cfg, "compute_dtype")
+    res = x
+    x = L.rms_norm(x, lp["norm"]["scale"], cfg.norm_eps)
+    z, xr, b_in, c_in, dt = _project(lp, x, cfg)
+
+    def conv_step(tail, new, w):
+        seq = jnp.concatenate([tail, new.astype(tail.dtype)], axis=1)  # (B,K,C)
+        out = jax.nn.silu(jnp.einsum("bkc,ck->bc", seq.astype(cd),
+                                     w.astype(cd)))
+        return out, seq[:, 1:, :]
+
+    xr_c, tail_x2 = conv_step(tail_x, xr, lp["conv_x"])
+    bc_new = jnp.concatenate([b_in, c_in], axis=-1)
+    bc_c, tail_bc2 = conv_step(tail_bc, bc_new,
+                               jnp.concatenate([lp["conv_b"], lp["conv_c"]], 0))
+    b_c, c_c = bc_c[:, :n], bc_c[:, n:]
+    xh = xr_c.reshape(-1, h, p).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])  # (B,H)
+    a = -jnp.exp(lp["a_log"])
+    decay = jnp.exp(dtv * a)  # (B,H)
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh, b_c.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, c_c.astype(jnp.float32))
+    y = y + lp["d_skip"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_in).astype(cd)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"]["scale"], cfg.norm_eps)
+    return res + y @ lp["out_proj"].astype(cd), state, tail_x2, tail_bc2
+
+
+def decode_step(params, cache, token, cache_len, cfg: ArchConfig):
+    del cache_len  # state is O(1); position does not enter the recurrence
+    x = L.embed(params["embed"], token, cfg)
+
+    def body(carry, inp):
+        x = carry
+        lp, st, tx, tbc = inp
+        y, st2, tx2, tbc2 = decode_layer(lp, x, st, tx, tbc, cfg)
+        return y, (st2, tx2, tbc2)
+
+    x, (st_new, tx_new, tbc_new) = jax.lax.scan(
+        body, x,
+        (params["layers"], cache["state"], cache["conv_x"], cache["conv_bc"]))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), {
+        "state": st_new, "conv_x": tx_new, "conv_bc": tbc_new}

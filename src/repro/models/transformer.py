@@ -1,0 +1,219 @@
+"""Decoder-only transformer LM (dense + VLM variants), scanned layers.
+
+Covers minitron-8b, gemma2-9b (local/global alternation + softcaps),
+glm4-9b, granite-34b (MQA), qwen2-vl-7b (M-RoPE + patch-embed frontend
+stub). MoE archs reuse this skeleton with the MLP swapped
+(:mod:`repro.models.moe`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+Params = dict[str, Any]
+
+
+def init_layer(rng, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": L.init_norm(cfg),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_params(rng, cfg: ArchConfig) -> Params:
+    ke, kl = jax.random.split(rng)
+    layer_rngs = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda r: init_layer(r, cfg))(layer_rngs)
+    return {
+        "embed": L.init_embedding(ke, cfg),
+        "layers": stacked,
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _layer_window(cfg: ArchConfig, layer_idx, seq_len: int):
+    """Sliding window size per layer as a traced value.
+
+    gemma2 alternates local (even) / global (odd) layers; global layers get
+    an "infinite" window (> seq_len) so the same flash kernel serves both.
+    """
+    if not cfg.local_global:
+        return jnp.int32(seq_len + 1)  # full attention on every layer
+    local = jnp.int32(cfg.sliding_window)
+    glob = jnp.int32(seq_len + 1)
+    return jnp.where(layer_idx % 2 == 0, local, glob)
+
+
+def apply_layer(lp: Params, x, cfg: ArchConfig, layer_idx, *, positions3=None):
+    from repro.dist.sharding import constrain
+
+    s = x.shape[1]
+    window = _layer_window(cfg, layer_idx, s)
+    h = L.rms_norm(x, lp["attn_norm"]["scale"], cfg.norm_eps)
+    h = L.attention_block(lp["attn"], h, cfg, layer_window=window,
+                          positions3=positions3)
+    x = constrain(x + h, "batch", None, None)
+    h = L.rms_norm(x, lp["mlp_norm"]["scale"], cfg.norm_eps)
+    h = L.mlp_block(lp["mlp"], h, cfg)
+    return constrain(x + h, "batch", None, None)
+
+
+def forward(params: Params, tokens, cfg: ArchConfig, *, patch_embeds=None,
+            positions3=None):
+    """Train/prefill forward: logits (B, S, vocab)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        # Stubbed modality frontend: precomputed patch embeddings replace
+        # the first n_patches token slots (dynamic-resolution pipeline
+        # would provide these; backbone cost is identical).
+        n_p = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, n_p:]], axis=1)
+    if cfg.mrope and positions3 is None:
+        pos = jnp.arange(x.shape[1])[None, :]
+        positions3 = jnp.stack([pos, pos, pos])  # text-only stream: t=h=w
+
+    layer_fn = functools.partial(apply_layer, cfg=cfg, positions3=positions3)
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    def scan_body(carry, inp):
+        lp, idx = inp
+        return layer_fn(lp, carry, layer_idx=idx), None
+
+    x, _ = jax.lax.scan(
+        scan_body, x, (params["layers"], jnp.arange(cfg.n_layers))
+    )
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg)
+
+
+# ------------------------------------------------------------- decoding ---
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv, cfg.head_dim
+    if cfg.local_global and cfg.local_global_split_cache \
+            and cfg.n_layers % 2 == 0:
+        # Split cache (§Perf Cell 2): local (even) layers keep only a
+        # sliding-window ring buffer — for gemma2 decode_32k that is
+        # 21×4096 instead of 21×32768 slots (cache bytes ×0.56, and the
+        # local layers' per-token read drops 8×).
+        half = cfg.n_layers // 2
+        wlen = min(cfg.sliding_window, max_len)
+        return {
+            "k_local": jnp.zeros((half, batch, wlen, kv, hd), dtype),
+            "v_local": jnp.zeros((half, batch, wlen, kv, hd), dtype),
+            "k": jnp.zeros((half, batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((half, batch, max_len, kv, hd), dtype),
+        }
+    shape = (cfg.n_layers, batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params: Params, cache, token, cache_len, cfg: ArchConfig):
+    """One-token decode. token: (B, 1) int32; cache_len: filled length
+    *including* the new token's slot. Returns (logits, new_cache).
+
+    Caches ride the layer scan as xs/ys (scan-stacked): under SPMD each
+    layer updates its 33 MB slice locally. (Carry-threading the whole
+    cache with a traced layer index was tried and REFUTED — GSPMD turns
+    the dynamic update on a sharded carry into full-cache selects, 19×
+    worse; see EXPERIMENTS.md §Perf Cell 2.)
+    """
+    if cfg.local_global and "k_local" in cache:
+        return _decode_step_local_global(params, cache, token, cache_len,
+                                         cfg)
+    x = L.embed(params["embed"], token, cfg)
+    pos = (cache_len - 1) * jnp.ones((x.shape[0], 1), jnp.int32)
+
+    def body(carry, inp):
+        x = carry
+        lp, kc, vc, idx = inp
+        h = L.rms_norm(x, lp["attn_norm"]["scale"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg)
+        if cfg.mrope:
+            p3 = jnp.stack([pos, pos, pos])
+            q = L.apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+            k = L.apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k.astype(kc.dtype), (0, cache_len - 1, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.astype(vc.dtype), (0, cache_len - 1, 0, 0))
+        window = _layer_window(cfg, idx, kc.shape[1])
+        o = L.decode_attention(q, kc, vc, cache_len, window=window,
+                               softcap_val=cfg.attn_softcap)
+        cd = L.dtype_of(cfg, "compute_dtype")
+        x = x + (o.reshape(o.shape[0], 1, -1) @ lp["attn"]["wo"].astype(cd))
+        h = L.rms_norm(x, lp["mlp_norm"]["scale"], cfg.norm_eps)
+        x = x + L.mlp_block(lp["mlp"], h, cfg)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x,
+        (params["layers"], cache["k"], cache["v"], jnp.arange(cfg.n_layers)),
+    )
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"k": k_new, "v": v_new}
+
+
+def _decode_step_local_global(params, cache, token, cache_len,
+                              cfg: ArchConfig):
+    """Split-cache decode for alternating local/global archs (gemma2):
+    even layers attend through a sliding-window ring buffer, odd layers
+    through the full cache. Layers are scanned in (local, global) pairs."""
+    x = L.embed(params["embed"], token, cfg)
+    pos = (cache_len - 1) * jnp.ones((x.shape[0], 1), jnp.int32)
+    cd = L.dtype_of(cfg, "compute_dtype")
+    wlen = cache["k_local"].shape[2]
+    slot = (cache_len - 1) % wlen
+    filled = jnp.minimum(cache_len, wlen)
+    pairs = jax.tree.map(
+        lambda a: a.reshape(cfg.n_layers // 2, 2, *a.shape[1:]),
+        params["layers"])
+
+    def attn_sub(lp, x, kc, vc, *, write_at, read_len, window):
+        h = L.rms_norm(x, lp["attn_norm"]["scale"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, write_at, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, write_at, 0, 0))
+        o = L.decode_attention(q, kc, vc, read_len, window=window,
+                               softcap_val=cfg.attn_softcap)
+        x = x + (o.reshape(o.shape[0], 1, -1) @ lp["attn"]["wo"].astype(cd))
+        h = L.rms_norm(x, lp["mlp_norm"]["scale"], cfg.norm_eps)
+        return x + L.mlp_block(lp["mlp"], h, cfg), kc, vc
+
+    def body(carry, inp):
+        x = carry
+        lpair, kl, vl, kg, vg = inp
+        lp_local = jax.tree.map(lambda a: a[0], lpair)
+        lp_global = jax.tree.map(lambda a: a[1], lpair)
+        # Ring slots hold exactly the last `wlen` tokens ⇒ no extra mask.
+        x, kl, vl = attn_sub(lp_local, x, kl, vl, write_at=slot,
+                             read_len=filled, window=None)
+        x, kg, vg = attn_sub(lp_global, x, kg, vg, write_at=cache_len - 1,
+                             read_len=cache_len, window=None)
+        return x, (kl, vl, kg, vg)
+
+    x, (kl, vl, kg, vg) = jax.lax.scan(
+        body, x, (pairs, cache["k_local"], cache["v_local"],
+                  cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"k_local": kl, "v_local": vl, "k": kg, "v": vg}

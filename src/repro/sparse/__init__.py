@@ -1,0 +1,18 @@
+from repro.sparse.matrix import SparseCSR, coo_to_csr
+from repro.sparse.generate import (
+    random_uniform_csr,
+    power_law_csr,
+    banded_csr,
+    block_structured_csr,
+    suitesparse_like_corpus,
+)
+
+__all__ = [
+    "SparseCSR",
+    "coo_to_csr",
+    "random_uniform_csr",
+    "power_law_csr",
+    "banded_csr",
+    "block_structured_csr",
+    "suitesparse_like_corpus",
+]

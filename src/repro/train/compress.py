@@ -1,0 +1,73 @@
+"""Int8 gradient compression with error feedback (cross-pod reductions).
+
+At 1000+ nodes the pod-to-pod (DCI) reduction dominates the collective
+term for data-parallel training. We quantize each gradient leaf to int8
+with a per-leaf scale before the cross-pod reduction and carry the
+quantization residual into the next step (error feedback), which keeps
+SGD/Adam convergence unbiased-in-the-limit (Karimireddy et al., 2019).
+
+``compress → psum over 'pod' → decompress`` drops cross-pod gradient
+bytes 4× (f32) / 2× (bf16). Intra-pod reductions stay full precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_leaf(g, err):
+    """Returns (q_int8, scale, new_err)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_err = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize_leaf(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err_state):
+    """Quantize every leaf; returns (q_tree, scale_tree, err_tree)."""
+    trip = jax.tree.map(quantize_leaf, grads, err_state)
+    is_t = lambda t: isinstance(t, tuple)
+    q = jax.tree.map(lambda t: t[0], trip, is_leaf=is_t)
+    s = jax.tree.map(lambda t: t[1], trip, is_leaf=is_t)
+    e = jax.tree.map(lambda t: t[2], trip, is_leaf=is_t)
+    return q, s, e
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(dequantize_leaf, q, s)
+
+
+def crosspod_mean_compressed(grads, err_state, axis: str = "pod"):
+    """Error-feedback int8 all-reduce-mean over a mesh axis.
+
+    Works inside shard_map/pmap contexts where ``axis`` is bound. The
+    quantization scale is shared across the axis first (a scalar pmax —
+    summing int8 payloads quantized with *different* scales would be
+    meaningless), so only the int8 payload crosses the slow inter-pod
+    links.
+    """
+    n = jax.lax.psum(1, axis)
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_err = g32 - q.astype(jnp.float32) * scale
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+        return qsum.astype(jnp.float32) * scale / n, new_err
+
+    pairs = jax.tree.map(leaf, grads, err_state)
+    is_t = lambda t: isinstance(t, tuple)
+    out = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_t)
+    err = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_t)
+    return out, err

@@ -1,0 +1,36 @@
+"""Elastic scaling: move a training state between meshes.
+
+Checkpoints store *logical* (unsharded) arrays, so elasticity is a
+re-placement problem: build shardings for the new mesh from the same
+rules and ``jax.device_put`` the restored pytree. Works for grow
+(16×16 → 2×16×16), shrink, and axis reshapes; uneven divisions are
+handled by GSPMD padding.
+
+``remesh_live`` moves an in-memory state (no disk round-trip) for
+planned resizes; the checkpoint path covers unplanned node loss:
+restart on the surviving mesh → ``restore_latest`` → ``device_put``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.dist import sharding as sh
+
+
+def remesh_live(tree, new_mesh, spec_fn=None):
+    """Re-place a pytree onto a new mesh (gathers then re-shards lazily)."""
+    if spec_fn is None:
+        shardings = sh.param_shardings(new_mesh, tree)
+    else:
+        shardings = spec_fn(new_mesh, tree)
+    host = jax.tree.map(lambda x: jax.device_get(x), tree)
+    return jax.device_put(host, shardings)
+
+
+def degrade_plan(n_failed: int, mesh_shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Pick the largest rectangular sub-mesh after losing ``n_failed``
+    devices (drop whole data-axis rows — the standard slice-repair move)."""
+    data, model = mesh_shape[-2], mesh_shape[-1]
+    rows_lost = (n_failed + model - 1) // model
+    new_data = max(1, data - rows_lost)
+    return (*mesh_shape[:-2], new_data, model)

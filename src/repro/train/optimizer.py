@@ -1,0 +1,82 @@
+"""AdamW + schedule + global-norm clipping, pure pytree implementation.
+
+``moment_dtype`` lets large models keep Adam moments in bf16 — a
+distributed-memory optimization recorded in EXPERIMENTS.md §Perf (the
+235B MoE needs it to fit a 256-chip pod with fp32 params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer memory
+
+
+def lr_at(step, cfg: OptConfig):
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params, cfg: OptConfig) -> dict[str, Any]:
+    md = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """One AdamW step; returns (params', state', metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(state["step"], cfg)
+    md = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mu_hat = mu32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mu32.astype(md), nu32.astype(md))
+
+    flat = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    params2 = jax.tree.map(lambda t: t[0], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    mu2 = jax.tree.map(lambda t: t[1], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    nu2 = jax.tree.map(lambda t: t[2], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params2, {"mu": mu2, "nu": nu2, "step": step}, metrics

@@ -1,0 +1,114 @@
+"""Sharded train/serve step builders (pjit + GSPMD).
+
+``make_train_step``: loss → grad → AdamW, with optional microbatch
+accumulation (sequential ``lax.scan`` over microbatches, grads
+accumulated in f32). Batch activations constrained to the data axes,
+params to the 2D (data×model) layout from dist/sharding.py.
+
+``make_serve_step``: one-token decode against a sharded KV/SSM cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.models import api
+from repro.models.config import ArchConfig
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: opt.OptConfig, mesh,
+                    microbatches: int = 1):
+    """Returns (train_step, in_shardings, out_shardings) ready for jit."""
+
+    def loss_of(params, batch):
+        return api.loss_fn(params, batch, cfg)
+
+    def train_step(params, opt_state, batch):
+        ctx = sh.activation_context(mesh, sh.dp_only_of(cfg))
+        ctx.__enter__()  # tracing is synchronous; exited below
+        batch = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, sh.sanitize_spec(sh.batch_spec(mesh, x.ndim),
+                                    x.shape, mesh)), batch)
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                loss_sum, g_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_sum + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, g0), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params2, opt2, metrics = opt.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        ctx.__exit__(None, None, None)
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def shardings_for_train(mesh, params, opt_state, batch_like,
+                        replicate_params=False):
+    p_sh = sh.param_shardings(mesh, params, replicate=replicate_params)
+    o_sh = {
+        "mu": sh.param_shardings(mesh, opt_state["mu"],
+                                 replicate=replicate_params),
+        "nu": sh.param_shardings(mesh, opt_state["nu"],
+                                 replicate=replicate_params),
+        "step": NamedSharding(mesh, P()),
+    }
+    b_sh = sh.batch_shardings(mesh, batch_like)
+    repl = NamedSharding(mesh, P())
+    metric_sh = {"grad_norm": repl, "lr": repl, "loss": repl}
+    return (p_sh, o_sh, b_sh), (p_sh, o_sh, metric_sh)
+
+
+def make_serve_step(cfg: ArchConfig, mesh):
+    def serve_step(params, cache, token, cache_len):
+        with sh.activation_context(mesh, sh.dp_only_of(cfg)):
+            token = jax.lax.with_sharding_constraint(
+                token, sh.sanitize_spec(sh.batch_spec(mesh, 2),
+                                        token.shape, mesh))
+            logits, cache2 = api.decode_step(params, cache, token,
+                                             cache_len, cfg)
+            if cfg.serve_sample:
+                # Distributed greedy sampling: argmax over the (vocab-
+                # sharded) logits — local argmax + a scalar-pair
+                # reduction instead of all-gathering the logits.
+                out = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return out, cache2
+        return logits, cache2
+
+    return serve_step
+
+
+def shardings_for_serve(mesh, params, cache, token_like, sample=False,
+                        replicate_params=False):
+    p_sh = sh.param_shardings(mesh, params, replicate=replicate_params)
+    c_sh = sh.cache_shardings(mesh, cache)
+    t_sh = NamedSharding(mesh, sh.sanitize_spec(
+        sh.batch_spec(mesh, 2), tuple(token_like.shape), mesh))
+    len_sh = NamedSharding(mesh, P())
+    out_sh = t_sh if sample else NamedSharding(mesh, sh.sanitize_spec(
+        sh.batch_spec(mesh, 3),
+        (token_like.shape[0], 1, 1 << 30), mesh))
+    return (p_sh, c_sh, t_sh, len_sh), (out_sh, c_sh)

@@ -1,0 +1,152 @@
+"""Libra preprocessing invariants: nnz conservation, exact reconstruction,
+distribution correctness, balance decomposition — incl. hypothesis sweeps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import preprocess
+from repro.core.balance import BalanceParams, decompose_counts
+from repro.core.distribution import r_sddmm, r_spmm
+from repro.core.formats import WINDOW
+from repro.core.windows import extract_windows, nnz1_fraction
+from repro.sparse import (
+    banded_csr,
+    power_law_csr,
+    random_uniform_csr,
+)
+from repro.sparse.generate import mixed_csr
+from repro.sparse.matrix import SparseCSR, coo_to_csr
+
+MATRICES = [
+    random_uniform_csr(64, 48, 0.03, seed=1),
+    power_law_csr(96, 64, 6.0, seed=2),
+    banded_csr(72, 72, 9, 0.8, seed=3),
+    mixed_csr(128, 128, seed=4),
+]
+
+
+def reconstruct_spmm_plan(plan) -> np.ndarray:
+    dense = np.zeros((plan.m, plan.k), np.float32)
+    tc = plan.tc
+    for b in range(tc.nblk):
+        w = tc.window[b]
+        for j in range(tc.bk):
+            if tc.bitmap[b, j] == 0:
+                continue
+            col = tc.cols[b, j]
+            for s in range(WINDOW):
+                r = w * WINDOW + s
+                if r < plan.m and tc.vals[b, s, j] != 0:
+                    dense[r, col] += tc.vals[b, s, j]
+    vp = plan.vpu
+    for t in range(vp.ntiles):
+        for j in range(vp.ts):
+            if vp.vals[t, j] != 0:
+                dense[vp.row[t], vp.cols[t, j]] += vp.vals[t, j]
+    return dense
+
+
+@pytest.mark.parametrize("mat_idx", range(len(MATRICES)))
+@pytest.mark.parametrize("threshold", [1, 3, 9])
+def test_spmm_plan_reconstructs_matrix(mat_idx, threshold):
+    a = MATRICES[mat_idx]
+    plan = preprocess.preprocess_spmm(a, threshold)
+    assert plan.tc.nnz + plan.vpu.nnz == a.nnz
+    np.testing.assert_allclose(reconstruct_spmm_plan(plan), a.to_dense(),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("mat_idx", range(len(MATRICES)))
+def test_spmm_positions_cover_all_nnz(mat_idx):
+    a = MATRICES[mat_idx]
+    plan = preprocess.preprocess_spmm(a)
+    pos = np.concatenate([
+        plan.tc.pos[plan.tc.pos >= 0].ravel(),
+        plan.vpu.pos[plan.vpu.pos >= 0].ravel(),
+    ])
+    assert sorted(pos.tolist()) == list(range(a.nnz))
+
+
+@pytest.mark.parametrize("mat_idx", range(len(MATRICES)))
+def test_sddmm_plan_positions(mat_idx):
+    a = MATRICES[mat_idx]
+    plan = preprocess.preprocess_sddmm(a)
+    pos = np.concatenate([
+        plan.tc_out_pos[plan.tc_out_pos >= 0].ravel(),
+        plan.vpu.out_pos[plan.vpu.mask].ravel(),
+    ])
+    assert sorted(pos.tolist()) == list(range(a.nnz))
+
+
+def test_window_blocks_sorted_for_kernel():
+    # The MXU kernel's revisit-accumulation requires non-decreasing windows.
+    for a in MATRICES:
+        plan = preprocess.preprocess_spmm(a, 1)
+        assert (np.diff(plan.tc.window) >= 0).all()
+
+
+def test_distribution_thresholds_are_single_resource_at_extremes():
+    a = MATRICES[3]
+    p_tcu = preprocess.preprocess_spmm(a, 1)
+    p_vpu = preprocess.preprocess_spmm(a, WINDOW + 1)
+    assert p_tcu.meta["vpu_nnz"] == 0
+    assert p_vpu.meta["tc_nnz"] == 0
+
+
+def test_nnz1_fraction_regimes():
+    sparse = random_uniform_csr(256, 256, 0.002, seed=9)
+    dense_band = banded_csr(256, 256, 16, 1.0, seed=9)
+    assert nnz1_fraction(sparse) > 0.8      # CUDA/VPU advantage regime
+    assert nnz1_fraction(dense_band) < 0.2  # TCU/MXU advantage regime
+
+
+def test_reuse_ratios():
+    assert r_spmm(8, 4) == 2.0
+    assert r_sddmm(24, 8, 16) == 2.0
+
+
+@given(st.integers(0, 200), st.integers(1, 64), st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_decompose_counts_conserves_work(total, limit, shared):
+    counts = np.asarray([total])
+    seg = decompose_counts(counts, limit, np.asarray([shared]))
+    assert seg.sizes.sum() == total
+    assert (seg.sizes <= limit).all()
+    if total > limit:
+        assert seg.atomic.all()  # decomposed ⇒ atomic
+
+
+@given(st.lists(st.tuples(st.integers(0, 63), st.integers(0, 63)),
+                min_size=1, max_size=200))
+@settings(max_examples=25, deadline=None)
+def test_plan_nnz_conservation_hypothesis(coords):
+    rows = np.asarray([c[0] for c in coords], np.int32)
+    cols = np.asarray([c[1] for c in coords], np.int32)
+    vals = np.arange(1, len(coords) + 1, dtype=np.float32)
+    a = coo_to_csr(64, 64, rows, cols, vals)
+    for thr in (1, 3, WINDOW + 1):
+        plan = preprocess.preprocess_spmm(a, thr)
+        assert plan.tc.nnz + plan.vpu.nnz == a.nnz
+        np.testing.assert_allclose(reconstruct_spmm_plan(plan),
+                                   a.to_dense(), atol=1e-5)
+
+
+def test_scalar_loop_preprocessing_matches():
+    a = MATRICES[0]
+    p1 = preprocess.preprocess_spmm(a)
+    p2 = preprocess.preprocess_spmm_loop(a)
+    np.testing.assert_array_equal(p1.tc.vals, p2.tc.vals)
+    np.testing.assert_array_equal(p1.vpu.vals, p2.vpu.vals)
+
+
+def test_extract_windows_positions_match_csr_order():
+    a = MATRICES[1]
+    rows, cols, vals = a.to_coo()
+    for w, wv in enumerate(extract_windows(a)):
+        for vi in range(wv.cols.size):
+            for s in range(WINDOW):
+                p = wv.pos[vi, s]
+                if p >= 0:
+                    assert rows[p] == w * WINDOW + s
+                    assert cols[p] == wv.cols[vi]
+                    assert vals[p] == wv.vals[vi, s]

@@ -1,0 +1,126 @@
+"""GNN layers on Libra ops: forward vs dense oracle + gradient duality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import gnn
+from repro.sparse import power_law_csr
+from repro.sparse.generate import mixed_csr
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return mixed_csr(96, 96, seed=21)
+
+
+@pytest.fixture(scope="module")
+def gops(graph):
+    return gnn.GraphOps(graph)
+
+
+def test_spmm_forward_matches_dense(graph, gops, rng):
+    b = rng.standard_normal((graph.k, 16)).astype(np.float32)
+    _, _, vals = graph.to_coo()
+    out = np.asarray(gops.spmm(jnp.asarray(vals), jnp.asarray(b)))
+    np.testing.assert_allclose(out, graph.to_dense() @ b, rtol=1e-3, atol=1e-3)
+
+
+def test_spmm_grads_match_dense_autodiff(graph, gops, rng):
+    rows, cols, vals = graph.to_coo()
+    b = rng.standard_normal((graph.k, 8)).astype(np.float32)
+
+    def libra_loss(v, b):
+        return (gops.spmm(v, b) ** 2).sum()
+
+    def dense_loss(v, b):
+        dense = jnp.zeros((graph.m, graph.k)).at[rows, cols].set(v)
+        return ((dense @ b) ** 2).sum()
+
+    g1 = jax.grad(libra_loss, argnums=(0, 1))(jnp.asarray(vals), jnp.asarray(b))
+    g2 = jax.grad(dense_loss, argnums=(0, 1))(jnp.asarray(vals), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(g1[0]), np.asarray(g2[0]),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(g1[1]), np.asarray(g2[1]),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_sddmm_grads_match_dense_autodiff(graph, gops, rng):
+    rows, cols, _ = graph.to_coo()
+    x = rng.standard_normal((graph.m, 8)).astype(np.float32)
+    y = rng.standard_normal((graph.k, 8)).astype(np.float32)
+
+    def libra_loss(x, y):
+        return (gops.sddmm(x, y) ** 2).sum()
+
+    def dense_loss(x, y):
+        s = x @ y.T
+        return (s[rows, cols] ** 2).sum()
+
+    g1 = jax.grad(libra_loss, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(y))
+    g2 = jax.grad(dense_loss, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(g1[0]), np.asarray(g2[0]),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(g1[1]), np.asarray(g2[1]),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_edge_softmax_rows_sum_to_one(graph, gops, rng):
+    scores = jnp.asarray(rng.standard_normal(graph.nnz).astype(np.float32))
+    att = gops_att = gnn.edge_softmax(gops, scores)
+    sums = jax.ops.segment_sum(att, gops.edge_row, num_segments=graph.m)
+    rows_with_edges = np.unique(np.asarray(gops.edge_row))
+    np.testing.assert_allclose(np.asarray(sums)[rows_with_edges], 1.0,
+                               rtol=1e-5)
+
+
+def test_gcn_trains_loss_decreases(graph, rng):
+    # Standard GCN normalization uses self-loops: Â = D^-½(A+I)D^-½ —
+    # they let node features pass through, so planted feature-projection
+    # labels are learnable and the loss decrease is guaranteed.
+    from repro.sparse.matrix import coo_to_csr
+
+    rows, cols, vals = graph.to_coo()
+    eye = np.arange(graph.m, dtype=np.int32)
+    a_sl = coo_to_csr(graph.m, graph.k,
+                      np.concatenate([rows, eye]),
+                      np.concatenate([cols, eye]),
+                      np.concatenate([vals, np.ones(graph.m, np.float32)]))
+    gops_sl = gnn.GraphOps(a_sl)
+    feats = jnp.asarray(rng.standard_normal((graph.m, 16)).astype(np.float32))
+    proj = rng.standard_normal((16, 4)).astype(np.float32)
+    labels = jnp.asarray(np.argmax(np.asarray(feats) @ proj, axis=1))
+    norm = jnp.asarray(gnn.gcn_norm_edges(a_sl))
+    params = gnn.init_gcn(jax.random.PRNGKey(0), [16, 16, 4])
+
+    def loss_fn(params):
+        logits = gnn.gcn_forward(params, gops_sl, feats, norm)
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(lp, labels[:, None], axis=1).mean()
+
+    vg = jax.jit(jax.value_and_grad(loss_fn))
+    loss0 = None
+    for step in range(60):
+        loss, grads = vg(params)
+        params = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < loss0 * 0.9, (loss0, float(loss))
+
+
+def test_agnn_forward_finite(graph, gops, rng):
+    feats = jnp.asarray(rng.standard_normal((graph.m, 12)).astype(np.float32))
+    params = gnn.init_agnn(jax.random.PRNGKey(1), [12, 8])
+    out = gnn.agnn_forward(params, gops, feats)
+    assert out.shape == (graph.m, 8)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_transpose_perm_roundtrip():
+    a = power_law_csr(48, 40, 4.0, seed=5)
+    at, perm = gnn.transpose_csr(a)
+    rows, cols, vals = a.to_coo()
+    rt, ct, vt = at.to_coo()
+    np.testing.assert_array_equal(rt, cols[perm])
+    np.testing.assert_array_equal(ct, rows[perm])
+    np.testing.assert_allclose(vt, vals[perm])

@@ -1,0 +1,80 @@
+"""Hypothesis property tests: the hybrid operators equal the dense oracle
+for arbitrary sparsity patterns, thresholds, and dtypes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sddmm import LibraSDDMM
+from repro.core.spmm import LibraSpMM
+from repro.kernels import ref
+from repro.sparse.matrix import coo_to_csr
+
+
+@st.composite
+def sparse_matrix(draw, max_dim=96):
+    m = draw(st.integers(8, max_dim))
+    k = draw(st.integers(8, max_dim))
+    nnz = draw(st.integers(1, min(m * k, 220)))
+    rows = draw(st.lists(st.integers(0, m - 1), min_size=nnz, max_size=nnz))
+    cols = draw(st.lists(st.integers(0, k - 1), min_size=nnz, max_size=nnz))
+    seed = draw(st.integers(0, 2**16))
+    vals = np.random.default_rng(seed).standard_normal(nnz).astype(np.float32)
+    return coo_to_csr(m, k, np.asarray(rows, np.int32),
+                      np.asarray(cols, np.int32), vals)
+
+
+@given(sparse_matrix(), st.integers(1, 9))
+@settings(max_examples=25, deadline=None)
+def test_spmm_any_pattern_any_threshold(a, threshold):
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal((a.k, 16)).astype(np.float32)
+    op = LibraSpMM(a, threshold=threshold)
+    out = np.asarray(op(jnp.asarray(b)))
+    np.testing.assert_allclose(out, a.to_dense() @ b, rtol=2e-3, atol=2e-3)
+    # conservation invariant
+    assert op.plan.tc.nnz + op.plan.vpu.nnz == a.nnz
+
+
+@given(sparse_matrix(max_dim=64), st.integers(1, 64))
+@settings(max_examples=15, deadline=None)
+def test_sddmm_any_pattern_any_threshold(a, threshold):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((a.m, 24)).astype(np.float32)
+    y = rng.standard_normal((a.k, 24)).astype(np.float32)
+    op = LibraSDDMM(a, threshold=threshold)
+    out = np.asarray(op(jnp.asarray(x), jnp.asarray(y)))
+    oracle = ref.sddmm_dense_oracle(a.to_dense(), x, y)
+    np.testing.assert_allclose(out, oracle, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_spmm_pallas_dtypes(dtype, rng):
+    from repro.sparse.generate import mixed_csr
+
+    a = mixed_csr(64, 64, seed=5)
+    b = rng.standard_normal((a.k, 32)).astype(dtype)
+    op = LibraSpMM(a)
+    out = np.asarray(op(jnp.asarray(b.astype(np.float32)),
+                        backend="pallas"))
+    tol = 1e-2 if dtype == np.float16 else 1e-3
+    np.testing.assert_allclose(out, a.to_dense() @ b.astype(np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_empty_matrix_roundtrip():
+    a = coo_to_csr(16, 16, np.zeros(0, np.int32), np.zeros(0, np.int32),
+                   np.zeros(0, np.float32))
+    op = LibraSpMM(a)
+    out = np.asarray(op(jnp.ones((16, 8))))
+    np.testing.assert_allclose(out, 0.0)
+
+
+def test_single_element_matrix():
+    a = coo_to_csr(8, 8, np.asarray([3], np.int32), np.asarray([5], np.int32),
+                   np.asarray([2.5], np.float32))
+    for mode in ("hybrid", "tcu", "vpu"):
+        op = LibraSpMM(a, mode=mode)
+        out = np.asarray(op(jnp.eye(8)))
+        assert out[3, 5] == pytest.approx(2.5)
+        assert np.abs(out).sum() == pytest.approx(2.5)

@@ -1,0 +1,57 @@
+"""End-to-end behaviour tests for the whole system: the paper's GNN
+pipeline through Libra ops, the LM training loop with checkpoint/resume,
+and generation through the serving path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import generate
+from repro.launch.train import train_loop
+from repro.models import gnn
+from repro.sparse import power_law_csr
+
+
+def test_gnn_end_to_end_agnn_sddmm_softmax_spmm():
+    """AGNN layer = SDDMM → row-softmax → SpMM, all through Libra plans;
+    training decreases loss (the paper's end-to-end claim in miniature)."""
+    a = power_law_csr(256, 256, 8.0, seed=2)
+    gops = gnn.GraphOps(a)
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.standard_normal((a.m, 16)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 4, a.m))
+    params = gnn.init_agnn(jax.random.PRNGKey(0), [16, 4])
+
+    def loss_fn(p):
+        logits = gnn.agnn_forward(p, gops, feats)
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(lp, labels[:, None], 1).mean()
+
+    vg = jax.jit(jax.value_and_grad(loss_fn))
+    losses = []
+    for _ in range(15):
+        loss, g = vg(params)
+        params = jax.tree.map(lambda p, gg: p - 0.5 * gg, params, g)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.98
+
+
+def test_lm_train_loop_with_checkpoint_resume(tmp_path):
+    cfg = get_smoke_config("glm4_9b")
+    d = str(tmp_path / "ck")
+    _, losses1 = train_loop(cfg, steps=6, global_batch=4, seq_len=64,
+                            ckpt_dir=d, save_every=3, log_every=100)
+    # resume from step 6 and continue
+    _, losses2 = train_loop(cfg, steps=8, global_batch=4, seq_len=64,
+                            ckpt_dir=d, resume=True, log_every=100)
+    assert len(losses2) == 2  # only steps 6..7 re-run
+    assert np.isfinite(losses1 + losses2).all()
+
+
+def test_serve_generates_consistent_tokens():
+    cfg = get_smoke_config("minitron_8b").scaled(compute_dtype="float32")
+    t1, _ = generate(cfg, batch=2, prompt_len=8, gen=6, seed=3)
+    t2, _ = generate(cfg, batch=2, prompt_len=8, gen=6, seed=3)
+    np.testing.assert_array_equal(t1, t2)  # greedy decode is deterministic
+    assert t1.shape == (2, 6)
+    assert (t1 >= 0).all() and (t1 < cfg.vocab).all()

@@ -1,0 +1,48 @@
+"""Threshold tuner + TPU cost model: the paper's Fig.-11 structure."""
+import numpy as np
+
+from repro.core import preprocess
+from repro.core.formats import WINDOW
+from repro.core.threshold import (
+    HardwareModel,
+    analytic_threshold,
+    model_spmm_time,
+    modeled_best_threshold,
+)
+from repro.sparse import banded_csr, random_uniform_csr
+from repro.sparse.generate import mixed_csr
+
+
+def test_analytic_threshold_in_range():
+    t = analytic_threshold(HardwareModel())
+    assert 1 <= t <= WINDOW
+
+
+def test_cost_model_monotone_regimes():
+    """Extreme-sparse matrices should prefer the VPU (high threshold);
+    dense-banded should prefer the MXU (low threshold)."""
+    sparse = random_uniform_csr(256, 256, 0.002, seed=1)
+    banded = banded_csr(256, 256, 16, 1.0, seed=1)
+    m_sparse = modeled_best_threshold(sparse, n=128)
+    m_banded = modeled_best_threshold(banded, n=128)
+    # For the banded matrix, MXU-only (threshold 1) beats VPU-only.
+    assert m_banded[1] < m_banded[WINDOW + 1]
+    # For the extreme-sparse matrix, VPU-only beats MXU-only.
+    assert m_sparse[WINDOW + 1] < m_sparse[1]
+
+
+def test_hybrid_sweet_point_interior_for_mixed():
+    """Paper Fig. 11: a hybrid-regime matrix's optimum lies strictly
+    between the single-resource extremes under the TPU cost model."""
+    a = mixed_csr(384, 384, seed=8)
+    m = modeled_best_threshold(a, n=128)
+    best = min(m, key=m.get)
+    assert m[best] <= m[1] and m[best] <= m[WINDOW + 1]
+    assert m[best] < max(m[1], m[WINDOW + 1])  # hybrid strictly helps
+
+
+def test_model_time_positive_and_finite():
+    a = mixed_csr(128, 128, seed=2)
+    plan = preprocess.preprocess_spmm(a)
+    t = model_spmm_time(plan, 128)
+    assert np.isfinite(t) and t > 0
