@@ -9,8 +9,20 @@ from jax.experimental import sparse as jsparse
 
 from benchmarks.common import corpus, spmm_gflops, timeit
 from repro.core.spmm import LibraSpMM
+from repro.kernels.ops import spmm_apply
 
 N = 128
+
+
+def _pallas_bytes_accessed(op: LibraSpMM, b) -> float:
+    """HLO bytes-accessed of the jitted Pallas apply (compile only, no
+    run) via the roofline analyzer — the redundant-output-traffic metric
+    the single-pass fused path optimizes."""
+    from repro.launch import hlo_analysis as H
+
+    lowered = spmm_apply.lower(op.arrays, b, m=op.m, nwin=op.nwin,
+                               backend="pallas", interpret=True)
+    return float(H.analyze_hlo(lowered.compile().as_text()).hbm_bytes)
 
 
 def run() -> list[tuple]:
@@ -18,6 +30,7 @@ def run() -> list[tuple]:
     rng = np.random.default_rng(1)
     speedups_vs_dense = []
     speedups_vs_bcoo = []
+    first = True
     for name, a in corpus().items():
         b = jnp.asarray(rng.standard_normal((a.k, N)).astype(np.float32))
         dense_a = jnp.asarray(a.to_dense())
@@ -25,8 +38,10 @@ def run() -> list[tuple]:
         bcoo = jsparse.BCOO.fromdense(np.asarray(dense_a))
         t_bcoo = timeit(jax.jit(lambda m, b: m @ b), bcoo, b)
         results = {}
+        ops = {}
         for mode in ("hybrid", "tcu", "vpu"):
             op = LibraSpMM(a, mode=mode)
+            ops[mode] = op
             results[mode] = timeit(lambda: op(b))
         t_hyb = results["hybrid"]
         rows.append((f"spmm/{name}/hybrid", t_hyb * 1e6,
@@ -41,6 +56,10 @@ def run() -> list[tuple]:
                      f"x{t_bcoo / t_hyb:.2f}"))
         speedups_vs_dense.append(t_dense / t_hyb)
         speedups_vs_bcoo.append(t_bcoo / t_hyb)
+        if first:  # default matrix: track the fused-path memory footprint
+            first = False
+            rows.append((f"spmm/{name}/pallas_bytes_accessed", 0.0,
+                         f"{_pallas_bytes_accessed(ops['hybrid'], b):.0f}B"))
     rows.append(("spmm/gmean_speedup_vs_dense", 0.0,
                  f"{np.exp(np.mean(np.log(speedups_vs_dense))):.2f}x"))
     rows.append(("spmm/gmean_speedup_vs_bcoo", 0.0,

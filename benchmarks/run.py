@@ -1,7 +1,10 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV and
+# optionally writes the same rows as machine-readable JSON (--json) so the
+# perf trajectory accumulates across PRs.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -11,6 +14,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig1,spmm,sddmm,"
                          "ablations,gnn,roofline)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON: "
+                         "[{name, us_per_call, derived}, ...]")
     args = ap.parse_args()
     from benchmarks import (
         bench_ablations,
@@ -30,18 +36,37 @@ def main() -> None:
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
+    unknown = only - set(suites)
+    if unknown:
+        ap.error(f"unknown suite(s): {sorted(unknown)} "
+                 f"(choose from {sorted(suites)})")
+    if args.json:  # fail fast on an unwritable path, not after the run
+        # (append mode: must not truncate an existing trajectory file in
+        # case the run is interrupted before the final dump)
+        with open(args.json, "a"):
+            pass
     print("name,us_per_call,derived")
     failed = False
+    records: list[dict] = []
     for name, fn in suites.items():
         if name not in only:
             continue
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
+                records.append(
+                    {"name": row_name, "us_per_call": round(us, 1),
+                     "derived": derived})
         except Exception:
             failed = True
             print(f"{name},0.0,ERROR", flush=True)
+            records.append({"name": name, "us_per_call": 0.0,
+                            "derived": "ERROR"})
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+            f.write("\n")
     if failed:
         sys.exit(1)
 

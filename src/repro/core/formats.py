@@ -42,6 +42,17 @@ class TCBlocks:
     atomic:  (nblk,) bool — True if this window's output is also written by
              another path/segment and must go through the combine reduction
     nnz:     int — non-zeros covered by this portion
+
+    Two fields are *derived* from ``window`` (the TC-window compaction map):
+
+    rank:       (nblk,) i32 — dense rank of each block's window among the
+                windows that have TC work. The MXU kernel writes its output
+                at ``rank`` instead of ``window``, so the TC partial buffer
+                is ``(n_active, 8, n)`` rather than ``(nwin, 8, n)`` — on
+                hyper-sparse matrices (tc_ratio → 0) that removes nearly
+                the entire zero-initialized dense output.
+    active_win: (n_active,) i32 — rank → window id, used by the scatter
+                epilogue to place compacted TC rows into C.
     """
 
     vals: np.ndarray
@@ -52,10 +63,28 @@ class TCBlocks:
     nnz: int
     bk: int
     pos: np.ndarray | None = None  # (nblk, WINDOW, bk) canonical nnz idx, −1 pad
+    rank: np.ndarray = dataclasses.field(init=False)
+    active_win: np.ndarray = dataclasses.field(init=False)
+
+    def __post_init__(self):
+        # Preprocessing always emits ≥ 1 block (a zero dummy when the TC
+        # portion is empty — see preprocess._pad_blocks), so active_win is
+        # normally non-empty. A block-less TCBlocks keeps active_win empty
+        # rather than fabricating a window with no backing block (which
+        # would scatter an unwritten kernel output into C).
+        win = np.asarray(self.window, np.int32)
+        active = np.unique(win)
+        object.__setattr__(self, "active_win", active.astype(np.int32))
+        object.__setattr__(
+            self, "rank", np.searchsorted(active, win).astype(np.int32))
 
     @property
     def nblk(self) -> int:
         return int(self.vals.shape[0])
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active_win.shape[0])
 
     @property
     def padded_zeros(self) -> int:
@@ -133,11 +162,19 @@ def device_arrays(plan) -> dict[str, jnp.ndarray]:
     """Upload a plan's arrays once; reused across iterations (paper §4.1 ③)."""
     out = {}
     if isinstance(plan, SpMMPlan):
+        # tc_active_row: flat output-row index of every compacted TC row —
+        # the scatter map of the fused combine epilogue (rank r owns rows
+        # active_win[r]*8 .. active_win[r]*8+7 of C).
+        active_rows = (
+            plan.tc.active_win[:, None].astype(np.int64) * WINDOW
+            + np.arange(WINDOW, dtype=np.int64)[None, :]
+        ).reshape(-1)
         out.update(
             tc_vals=jnp.asarray(plan.tc.vals),
             tc_cols=jnp.asarray(plan.tc.cols),
             tc_bitmap=jnp.asarray(plan.tc.bitmap),
-            tc_window=jnp.asarray(plan.tc.window),
+            tc_rank=jnp.asarray(plan.tc.rank),
+            tc_active_row=jnp.asarray(active_rows, jnp.int32),
             tc_pos=jnp.asarray(plan.tc.pos),
             vpu_vals=jnp.asarray(plan.vpu.vals),
             vpu_cols=jnp.asarray(plan.vpu.cols),

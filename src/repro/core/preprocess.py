@@ -67,6 +67,12 @@ def preprocess_spmm(
     Fully bulk-vectorized (NumPy ufunc scatters — the data-parallel
     formulation of the paper's GPU preprocessing kernels): no per-element
     Python. Produces bit-identical plans to :func:`preprocess_spmm_loop`.
+
+    Output ordering contracts consumed by the single-pass apply path:
+    TC blocks are window-sorted (so :class:`TCBlocks` derives the dense
+    compaction rank map) and VPU residual tiles are row-sorted, which
+    keeps the fused scatter-accumulate epilogue's updates
+    window-contiguous instead of random-access.
     """
     balance = balance or BalanceParams()
     nwin = num_windows(a.m)

@@ -42,12 +42,22 @@ class LibraSDDMM:
         # CSR structure for chaining into softmax/SpMM.
         self.indptr = np.asarray(a.indptr)
         self.indices = np.asarray(a.indices)
+        # Per-operator apply cache (see LibraSpMM): one AOT-compiled
+        # executable per (kf, dtype, backend); plan arrays stay arguments.
+        self._apply_cache: dict = {}
 
     def __call__(self, x: jnp.ndarray, y: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
         assert x.shape[0] >= self.m and y.shape[0] >= self.k
-        return sddmm_apply(self.arrays, x, y, nnz=self.nnz, backend=backend,
-                           interpret=interpret)
+        key = (x.shape[1], str(x.dtype), backend, interpret,
+               x.shape[0], y.shape[0])
+        fn = self._apply_cache.get(key)
+        if fn is None:
+            fn = sddmm_apply.lower(self.arrays, x, y, nnz=self.nnz,
+                                   backend=backend,
+                                   interpret=interpret).compile()
+            self._apply_cache[key] = fn
+        return fn(self.arrays, x, y)
 
     @property
     def tc_ratio(self) -> float:

@@ -1,0 +1,1 @@
+"""Distributed-execution utilities (mesh axis rules, GSPMD shardings)."""

@@ -1,11 +1,37 @@
-"""Jit'd wrappers around the Pallas kernels + the hybrid combine.
+"""Jit'd wrappers around the Pallas kernels + the single-pass hybrid combine.
 
 ``backend="pallas"`` runs the TPU kernels (interpret mode on CPU — the
 correctness substrate); ``backend="xla"`` runs the pure-jnp oracles from
 :mod:`repro.kernels.ref` (the fast path on CPU and the baseline the
 kernels are validated against). All padding (N → multiple of the lane
-tile, M → multiple of the window) happens here so kernels stay
-hardware-aligned (MXU multiples of 128 lanes / 8 sublanes).
+tile, K → multiple of the k-tile, M → multiple of the window) happens here
+so kernels stay hardware-aligned (MXU multiples of 128 lanes / 8 sublanes).
+
+Kernel architecture (single-pass fused hybrid)
+----------------------------------------------
+
+The hybrid overhead the paper drives to zero (§4.4–4.5) is re-introduced
+whenever the two streams materialize redundant output or combine in extra
+passes. The apply path here makes exactly one pass over every output byte:
+
+1. **Compacted TC layout.** Preprocessing ranks the windows that have TC
+   work (``TCBlocks.rank`` / ``TCBlocks.active_win``); ``spmm_mxu`` writes
+   a ``(n_active, 8, n)`` partial instead of a dense zero-initialized
+   ``(nwin, 8, n)`` buffer. ``tc_active_row`` maps compacted rows back to
+   rows of C.
+2. **k-tiled B streaming.** Both SpMM kernels walk B in ``(kt, nt)``
+   VMEM panels (third grid dimension, accumulator carried on the
+   revisited output block), so k is unbounded by VMEM.
+3. **Vectorized gathers.** All four kernels fetch their B/X/Y rows with
+   batched ``take`` formulations on the resident panel — no per-row
+   scalar DMA loops.
+4. **Fused combine epilogue.** VPU residual tiles are row-sorted at
+   preprocess time, and the TC scatter + VPU segment reduction + the
+   TC/VPU add collapse into ONE ``scatter-add`` of the concatenated
+   partials into a single zero-initialized C — the TPU-deterministic
+   analogue of the paper's atomicAdd combine, touching each output byte
+   once. SDDMM likewise combines both streams' scores with a single
+   scatter into the canonical nnz vector.
 """
 from __future__ import annotations
 
@@ -21,6 +47,8 @@ from repro.kernels.sddmm_vpu import sddmm_vpu
 from repro.kernels.spmm_mxu import spmm_mxu
 from repro.kernels.spmm_vpu import spmm_vpu
 
+DEFAULT_KT = 512  # B k-tile rows resident per grid step (≈256 KB at nt=128)
+
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     size = x.shape[axis]
@@ -32,22 +60,37 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+def _pick_kt(k: int, kt: int | None) -> int:
+    """Largest k-tile ≤ the request (whole k when it already fits)."""
+    kt = DEFAULT_KT if kt is None else kt
+    return min(kt, k)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("m", "nwin", "backend", "nt", "interpret")
+    jax.jit,
+    static_argnames=("m", "nwin", "backend", "nt", "kt", "interpret"),
 )
 def spmm_apply(arrs, b, *, m: int, nwin: int, backend: str = "xla",
-               nt: int = 128, interpret: bool = True):
+               nt: int = 128, kt: int | None = None, interpret: bool = True):
     """Hybrid SpMM: C[m, n] = A_sp @ B using a preprocessed Libra plan."""
     n0 = b.shape[1]
     if backend == "xla":
         return ref.spmm_hybrid_ref(arrs, b, m, nwin)
-    b_p = _pad_to(b, 1, nt)
-    tc = spmm_mxu(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_window"], b_p,
-                  nwin=nwin, nt=nt, interpret=interpret)
+    ktile = _pick_kt(b.shape[0], kt)
+    b_p = _pad_to(_pad_to(b, 1, nt), 0, ktile)
+    n_active = arrs["tc_active_row"].shape[0] // WINDOW
+    tc = spmm_mxu(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_rank"], b_p,
+                  n_active=n_active, nt=nt, kt=ktile, interpret=interpret)
     partials = spmm_vpu(arrs["vpu_vals"], arrs["vpu_cols"], b_p, nt=nt,
-                        interpret=interpret)
-    vpu = jax.ops.segment_sum(partials, arrs["vpu_row"], num_segments=m)
-    return tc[:m, :n0] + vpu[:, :n0]
+                        kt=ktile, interpret=interpret)
+    # Fused combine epilogue: one scatter-add of both streams' partials
+    # into a single zero-initialized C (rows ≥ m from the padded last
+    # window are sliced off; TC rows of empty-TC plans add only zeros).
+    rows = jnp.concatenate([arrs["tc_active_row"], arrs["vpu_row"]])
+    data = jnp.concatenate([tc, partials])
+    out = jnp.zeros((nwin * WINDOW, b_p.shape[1]), tc.dtype)
+    out = out.at[rows].add(data)
+    return out[:m, :n0]
 
 
 @functools.partial(
@@ -69,9 +112,11 @@ def sddmm_apply(arrs, x, y, *, nnz: int, backend: str = "xla",
     s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x, y, kf_tile=kt,
                      interpret=interpret)
     s_el = jnp.where(arrs["vpu_mask"], s_el, 0.0)
-    out = jnp.zeros((nnz + 1,), s_tc.dtype)
+    # Fused combine: one scatter of both streams into the canonical nnz
+    # vector (slot nnz swallows -1/masked padding).
     pos_tc = jnp.where(arrs["tc_out_pos"] >= 0, arrs["tc_out_pos"], nnz)
-    out = out.at[pos_tc.reshape(-1)].add(s_tc.reshape(-1))
     pos_el = jnp.where(arrs["vpu_mask"], arrs["vpu_out_pos"], nnz)
-    out = out.at[pos_el.reshape(-1)].add(s_el.reshape(-1))
+    pos = jnp.concatenate([pos_tc.reshape(-1), pos_el.reshape(-1)])
+    data = jnp.concatenate([s_tc.reshape(-1), s_el.reshape(-1)])
+    out = jnp.zeros((nnz + 1,), s_tc.dtype).at[pos].add(data)
     return out[:nnz]

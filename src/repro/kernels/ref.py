@@ -21,12 +21,15 @@ import numpy as np
 from repro.core.formats import WINDOW
 
 
-def spmm_tc_ref(tc_vals, tc_cols, tc_window, b, nwin):
-    """(nb,8,bk)×(nb,bk)→ windows of (nwin*8, n)."""
+def spmm_tc_compact_ref(tc_vals, tc_cols, tc_rank, b, n_active):
+    """Compacted-layout oracle for :func:`repro.kernels.spmm_mxu.spmm_mxu`:
+    ``(n_active*8, n)`` — one 8-row slab per TC-*active* window rank.
+    (The pre-compaction full-dense layout was ``rank → window`` with
+    ``n_active → nwin``; the kernel no longer produces it.)"""
     gathered = jnp.take(b, tc_cols, axis=0)  # (nb, bk, n)
     partial = jnp.einsum("bsk,bkn->bsn", tc_vals, gathered)  # (nb, 8, n)
-    out = jax.ops.segment_sum(partial, tc_window, num_segments=nwin)
-    return out.reshape(nwin * WINDOW, b.shape[1])
+    out = jax.ops.segment_sum(partial, tc_rank, num_segments=n_active)
+    return out.reshape(n_active * WINDOW, b.shape[1])
 
 
 def spmm_vpu_ref(vpu_vals, vpu_cols, vpu_row, b, m):
@@ -37,9 +40,17 @@ def spmm_vpu_ref(vpu_vals, vpu_cols, vpu_row, b, m):
 
 
 def spmm_hybrid_ref(arrs, b, m, nwin):
-    tc = spmm_tc_ref(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_window"], b, nwin)
-    vpu = spmm_vpu_ref(arrs["vpu_vals"], arrs["vpu_cols"], arrs["vpu_row"], b, m)
-    return tc[:m] + vpu
+    """Single-pass hybrid reference mirroring the fused Pallas epilogue:
+    compacted TC partials + VPU tile partials → ONE scatter-add into C."""
+    tc_rows = arrs["tc_active_row"]
+    tc = spmm_tc_compact_ref(arrs["tc_vals"], arrs["tc_cols"],
+                             arrs["tc_rank"], b, tc_rows.shape[0] // WINDOW)
+    gathered = jnp.take(b, arrs["vpu_cols"], axis=0)  # (nt, ts, n)
+    partials = jnp.einsum("tj,tjn->tn", arrs["vpu_vals"], gathered)
+    rows = jnp.concatenate([tc_rows, arrs["vpu_row"]])
+    data = jnp.concatenate([tc, partials])
+    out = jnp.zeros((nwin * WINDOW, b.shape[1]), tc.dtype)
+    return out.at[rows].add(data)[:m]
 
 
 def bitmap_mask(bitmap):
@@ -75,14 +86,15 @@ def sddmm_vpu_ref(rows, cols, mask, x, y):
 
 
 def sddmm_hybrid_ref(arrs, x, y, nnz):
-    """Hybrid SDDMM producing the canonical nnz-ordered value vector."""
+    """Hybrid SDDMM producing the canonical nnz-ordered value vector
+    (single fused scatter; slot nnz swallows -1/masked padding)."""
     s_tc = sddmm_tc_ref(arrs["tc_cols"], arrs["tc_bitmap"], arrs["tc_window"], x, y)
     s_el = sddmm_vpu_ref(arrs["vpu_rows"], arrs["vpu_cols"], arrs["vpu_mask"], x, y)
-    out = jnp.zeros((nnz + 1,), s_tc.dtype)  # slot nnz swallows -1 padding
     pos_tc = jnp.where(arrs["tc_out_pos"] >= 0, arrs["tc_out_pos"], nnz)
-    out = out.at[pos_tc.reshape(-1)].add(s_tc.reshape(-1))
     pos_el = jnp.where(arrs["vpu_mask"], arrs["vpu_out_pos"], nnz)
-    out = out.at[pos_el.reshape(-1)].add(s_el.reshape(-1))
+    pos = jnp.concatenate([pos_tc.reshape(-1), pos_el.reshape(-1)])
+    data = jnp.concatenate([s_tc.reshape(-1), s_el.reshape(-1)])
+    out = jnp.zeros((nnz + 1,), s_tc.dtype).at[pos].add(data)
     return out[:nnz]
 
 

@@ -7,7 +7,9 @@ tests its own bit of the 32-bit occupancy word, ``(bitmap >> sub) & 1``,
 which is the paper's per-thread ``(binary >> tid) & 1`` mapped onto the
 vector unit with zero divergence and no shared memory (§4.4, Fig. 8).
 
-The feature dimension is tiled (``kf_tile``) with in-VMEM accumulation so
+The ``BK`` rows of Y are fetched with one batched ``take`` on the
+resident feature tile (vectorized gather — no per-row scalar loop), and
+the feature dimension is tiled (``kf_tile``) with in-VMEM accumulation so
 arbitrarily wide embeddings stream through a bounded working set.
 """
 from __future__ import annotations
@@ -22,37 +24,31 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.formats import WINDOW
 
 
-def _kernel(window_ref, cols_ref, bitmap_ref, x_ref, y_ref, out_ref, gather_ref):
-    i = pl.program_id(0)  # block index
+def _kernel(window_ref, cols_ref, bitmap_ref, x_ref, y_ref, out_ref):
     f = pl.program_id(1)  # feature tile index
-    bk = gather_ref.shape[0]
+    bk = cols_ref.shape[1]
 
-    # Gather BK rows of Y (this feature tile) into VMEM scratch.
-    def body(jj, _):
-        row = cols_ref[i, jj]
-        gather_ref[pl.ds(jj, 1), :] = y_ref[pl.ds(row, 1), :]
-        return ()
-
-    jax.lax.fori_loop(0, bk, body, ())
-
-    @pl.when(f == 0)
-    def _():
-        out_ref[...] = jnp.zeros_like(out_ref)
+    # Batched gather of BK rows of Y (this feature tile).
+    gathered = jnp.take(y_ref[...], cols_ref[0], axis=0)  # (bk, kft)
 
     # 8×KFt @ KFt×BK on the MXU.
     s = jax.lax.dot_general(
         x_ref[0],
-        gather_ref[...],
+        gathered,
         (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+
+    @pl.when(f == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
 
     @pl.when(f == pl.num_programs(1) - 1)
     def _():
         # Bit-Decoding sample on the final accumulation: sublane r keeps
         # column j iff bit r of bitmap[j] is set.
         sub = jax.lax.broadcasted_iota(jnp.uint32, (WINDOW, bk), 0)
-        bits = (bitmap_ref[i][None, :].astype(jnp.uint32) >> sub) & jnp.uint32(1)
+        bits = (bitmap_ref[0][None, :].astype(jnp.uint32) >> sub) & jnp.uint32(1)
         out_ref[...] = jnp.where(bits > 0, out_ref[0] + s, 0.0)[None]
 
     @pl.when(f != pl.num_programs(1) - 1)
@@ -80,14 +76,15 @@ def sddmm_mxu(tc_cols, tc_bitmap, tc_window, x, y, *, kf_tile: int = 128,
     out = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, WINDOW, kf_tile), lambda i, f, w, c, bm: (w[i], 0, f)),
-                pl.BlockSpec((y.shape[0], kf_tile), lambda i, f, w, c, bm: (0, f)),
+                pl.BlockSpec((1, bk), lambda i, f, w: (i, 0)),
+                pl.BlockSpec((1, bk), lambda i, f, w: (i, 0)),
+                pl.BlockSpec((1, WINDOW, kf_tile), lambda i, f, w: (w[i], 0, f)),
+                pl.BlockSpec((y.shape[0], kf_tile), lambda i, f, w: (0, f)),
             ],
-            out_specs=pl.BlockSpec((1, WINDOW, bk), lambda i, f, w, c, bm: (i, 0, 0)),
-            scratch_shapes=[pltpu.VMEM((bk, kf_tile), jnp.float32)],
+            out_specs=pl.BlockSpec((1, WINDOW, bk), lambda i, f, w: (i, 0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((nb, WINDOW, bk), jnp.float32),
         interpret=interpret,

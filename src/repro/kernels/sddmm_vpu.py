@@ -1,10 +1,12 @@
 """VPU SDDMM path as a Pallas TPU kernel.
 
 One grid step processes a tile of ``TS`` isolated non-zero elements:
-``s[j] = ⟨X[rows[j]], Y[cols[j]]⟩``. Rows/cols are gathered per element
-(the paper's CUDA-core stream with Float4 chunks → 128-lane VMEM rows
-here); the dot reduction runs on the VPU. The feature dimension is tiled
-with accumulation so the working set stays bounded.
+``s[j] = ⟨X[rows[j]], Y[cols[j]]⟩``. The ``TS`` X-rows and Y-rows of a
+tile are fetched with two batched ``take``s on the resident feature tiles
+(vectorized gather — the paper's CUDA-core stream with Float4 chunks →
+128-lane VMEM rows here, but without the per-element scalar loop); the
+dot reduction runs on the VPU. The feature dimension is tiled with
+accumulation so the working set stays bounded.
 """
 from __future__ import annotations
 
@@ -13,29 +15,22 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(rows_ref, cols_ref, x_ref, y_ref, out_ref, acc_ref):
-    i = pl.program_id(0)  # tile index
+def _kernel(rows_ref, cols_ref, x_ref, y_ref, out_ref):
     f = pl.program_id(1)  # feature tile
-    ts = acc_ref.shape[1]
+
+    xg = jnp.take(x_ref[...], rows_ref[0], axis=0)  # (ts, kft)
+    yg = jnp.take(y_ref[...], cols_ref[0], axis=0)  # (ts, kft)
+    partial = jnp.sum(xg * yg, axis=1)[None, :]     # (1, ts)
 
     @pl.when(f == 0)
     def _():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        out_ref[...] = partial
 
-    def body(jj, _):
-        xr = x_ref[pl.ds(rows_ref[i, jj], 1), :]
-        yr = y_ref[pl.ds(cols_ref[i, jj], 1), :]
-        acc_ref[0, jj] = acc_ref[0, jj] + jnp.sum(xr * yr)
-        return ()
-
-    jax.lax.fori_loop(0, ts, body, ())
-
-    @pl.when(f == pl.num_programs(1) - 1)
+    @pl.when(f != 0)
     def _():
-        out_ref[...] = acc_ref[...]
+        out_ref[...] += partial
 
 
 @functools.partial(jax.jit, static_argnames=("kf_tile", "interpret"))
@@ -48,16 +43,14 @@ def sddmm_vpu(rows, cols, x, y, *, kf_tile: int = 128, interpret: bool = True):
 
     out = pl.pallas_call(
         _kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((x.shape[0], kf_tile), lambda i, f, r, c: (0, f)),
-                pl.BlockSpec((y.shape[0], kf_tile), lambda i, f, r, c: (0, f)),
-            ],
-            out_specs=pl.BlockSpec((1, ts), lambda i, f, r, c: (i, 0)),
-            scratch_shapes=[pltpu.VMEM((1, ts), jnp.float32)],
-        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ts), lambda i, f: (i, 0)),
+            pl.BlockSpec((1, ts), lambda i, f: (i, 0)),
+            pl.BlockSpec((x.shape[0], kf_tile), lambda i, f: (0, f)),
+            pl.BlockSpec((y.shape[0], kf_tile), lambda i, f: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((1, ts), lambda i, f: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((ntiles, ts), jnp.float32),
         interpret=interpret,
     )(rows, cols, x, y)

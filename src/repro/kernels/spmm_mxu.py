@@ -1,30 +1,42 @@
 """MXU (Tensor-core analogue) SpMM path as a Pallas TPU kernel.
 
 One grid step multiplies a condensed ``8×BK`` TC block by ``BK`` gathered
-rows of the dense matrix B and accumulates into the block's output window.
+rows of one k-tile of the dense matrix B and accumulates into the block's
+*compacted* output window.
 
-TPU adaptation of the paper's TCU stream (§4.4):
+TPU adaptation of the paper's TCU stream (§4.4), single-pass edition:
 
-* B rows are gathered **inside** the kernel with dynamic row loads driven
-  by the scalar-prefetched column indices (the analogue of loading B
-  fragments by the sparse block's column indices); the gather lands in a
-  VMEM scratch tile so the 8×BK × BK×NT product runs on the MXU.
-* Blocks are pre-sorted by window (preprocessing guarantees this), so the
-  output block of one window is *revisited consecutively*: the kernel
-  initializes the accumulator from the aliased C-init operand on first
-  visit and accumulates in VMEM, writing back to HBM once per
-  (window, column-tile). This replaces the paper's atomicAdd with a
-  conflict-free accumulation — the "store directly when not atomic" case
-  of the hybrid balancer. Windows with no TC block keep their C-init
-  value through the output aliasing (never touched).
-* Grid order is (column-tile, block) with blocks fastest, so the dense-B
-  tile for a column range stays VMEM-resident while every block consumes
-  it — the data-reuse dimension of the 2D-aware distribution.
+* **Compacted output (TC-window rank map).** Preprocessing assigns every
+  block a dense ``rank`` over the windows that actually have TC work; the
+  kernel writes ``(n_active, 8, n)`` instead of ``(nwin, 8, n)``. On
+  hyper-sparse matrices (tc_ratio → 0) this eliminates nearly the whole
+  zero-initialized dense TC output — the redundant-output-traffic term the
+  paper drives to zero. The caller scatters the compacted rows into C with
+  the plan's ``tc_active_row`` map (fused with the VPU combine).
+* **k-tiled B streaming.** The grid has a third dimension over k-tiles of
+  B (``kt`` rows per step) with VMEM accumulator carry on the revisited
+  output block, so only a ``(kt, nt)`` panel of B is ever resident —
+  large-k matrices (GNN feature dims, MoE dispatch) no longer need a
+  whole-``(k, nt)`` VMEM panel.
+* **Vectorized gather.** The per-block B-row gather is one batched
+  ``take`` on the resident k-tile (clamped indices + an in-tile mask zeroes
+  vectors whose source row lives in another k-tile), replacing the
+  scalar one-row-at-a-time ``fori_loop`` DMA of the previous revision.
+* Blocks are pre-sorted by window (preprocessing guarantees this), so an
+  output block is revisited consecutively across (block, k-tile) steps:
+  the kernel stores on the first visit and accumulates after — the
+  "store directly when not atomic" case of the hybrid balancer, with no
+  aliased C-init operand at all.
 
-Validation runs in interpret mode on CPU; on real hardware the only change
-is streaming B via double-buffered async copies instead of a VMEM-resident
-(k, nt) panel (the gather loop body is already expressed as dynamic row
-slices, which lower to VMEM loads / DMA).
+Grid-order tradeoff: with shared ranks across blocks, the only order
+whose output revisits are *consecutive* (Pallas' accumulation contract)
+is k-tile-fastest-within-block — which re-fetches each (kt, nt) B panel
+per block instead of keeping it resident while every block consumes it
+(the pre-k-tiling reuse guarantee). In interpret mode this is free; on
+real hardware the fix is double-buffered async B streaming decoupled
+from the grid (see ROADMAP "real TPU hardware" item), not a grid
+reorder, since block-fastest-within-k-tile would revisit output blocks
+non-consecutively.
 """
 from __future__ import annotations
 
@@ -38,68 +50,79 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.formats import WINDOW
 
 
-def _kernel(window_ref, cols_ref, cinit_ref, vals_ref, b_ref, out_ref, gather_ref):
-    i = pl.program_id(1)  # TC block index (fastest grid dim)
-    bk = gather_ref.shape[0]
+def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref):
+    i = pl.program_id(1)   # TC block index
+    kk = pl.program_id(2)  # k-tile index (fastest)
+    kt = b_ref.shape[0]
 
-    # --- Gather BK rows of B into VMEM scratch (dynamic row loads).
-    def body(jj, _):
-        row = cols_ref[i, jj]
-        gather_ref[pl.ds(jj, 1), :] = b_ref[pl.ds(row, 1), :]
-        return ()
-
-    jax.lax.fori_loop(0, bk, body, ())
-
-    # --- First visit of this output window ⇒ load the C initializer
-    # (MMA semantics: C = A×B + C).
-    first = jnp.logical_or(i == 0, window_ref[i] != window_ref[jnp.maximum(i - 1, 0)])
-
-    @pl.when(first)
-    def _():
-        out_ref[...] = cinit_ref[...]
+    # --- Batched gather of BK rows from the resident (kt, nt) B panel.
+    cols = cols_ref[0]                       # (bk,) i32, global B-row ids
+    local = cols - kk * kt
+    in_tile = (local >= 0) & (local < kt)
+    gathered = jnp.take(b_ref[...], jnp.clip(local, 0, kt - 1), axis=0)
+    gathered = jnp.where(in_tile[:, None], gathered, 0.0)  # (bk, nt)
 
     # --- 8×BK @ BK×NT on the MXU, f32 accumulation.
     acc = jax.lax.dot_general(
         vals_ref[0],
-        gather_ref[...],
+        gathered,
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    out_ref[...] += acc[None]
+
+    # --- First visit of this compacted output block ⇒ store, else add.
+    # (first block of the rank AND first k-tile; ranks are non-decreasing.)
+    first = jnp.logical_and(
+        kk == 0,
+        jnp.logical_or(i == 0,
+                       rank_ref[i] != rank_ref[jnp.maximum(i - 1, 0)]),
+    )
+
+    @pl.when(first)
+    def _():
+        out_ref[...] = acc[None]
+
+    @pl.when(jnp.logical_not(first))
+    def _():
+        out_ref[...] += acc[None]
 
 
-@functools.partial(jax.jit, static_argnames=("nwin", "nt", "interpret"))
-def spmm_mxu(tc_vals, tc_cols, tc_window, b, *, nwin: int, nt: int = 128,
-             interpret: bool = True):
-    """TC-path partial output, shape ``(nwin*8, n)``.
+@functools.partial(
+    jax.jit, static_argnames=("n_active", "nt", "kt", "interpret"))
+def spmm_mxu(tc_vals, tc_cols, tc_rank, b, *, n_active: int, nt: int = 128,
+             kt: int | None = None, interpret: bool = True):
+    """Compacted TC-path partial output, shape ``(n_active * 8, n)``.
 
     Args:
       tc_vals: (nb, 8, bk) f32 condensed blocks (zero padded).
       tc_cols: (nb, bk) i32 source column of each condensed vector.
-      tc_window: (nb,) i32 *non-decreasing* output window ids.
-      b: (k, n) dense matrix; n must be a multiple of ``nt`` (ops.py pads).
+      tc_rank: (nb,) i32 *non-decreasing* compacted window ranks.
+      b: (k, n) dense matrix; n must be a multiple of ``nt`` and k a
+         multiple of ``kt`` (ops.py pads both).
+      n_active: number of distinct ranks (compacted output height / 8).
+      kt: B k-tile rows per grid step (defaults to all of k resident).
     """
     nb, _, bk = tc_vals.shape
     k, n = b.shape
+    kt = k if kt is None else kt
     assert n % nt == 0, (n, nt)
-    grid = (n // nt, nb)
-    cinit = jnp.zeros((nwin, WINDOW, n), jnp.float32)
+    assert k % kt == 0, (k, kt)
+    grid = (n // nt, nb, k // kt)
 
     out = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, WINDOW, nt), lambda j, i, w, c: (w[i], 0, j)),
-                pl.BlockSpec((1, WINDOW, bk), lambda j, i, w, c: (i, 0, 0)),
-                pl.BlockSpec((k, nt), lambda j, i, w, c: (0, j)),
+                pl.BlockSpec((1, WINDOW, bk), lambda j, i, kk, r: (i, 0, 0)),
+                pl.BlockSpec((1, bk), lambda j, i, kk, r: (i, 0)),
+                pl.BlockSpec((kt, nt), lambda j, i, kk, r: (kk, j)),
             ],
-            out_specs=pl.BlockSpec((1, WINDOW, nt), lambda j, i, w, c: (w[i], 0, j)),
-            scratch_shapes=[pltpu.VMEM((bk, nt), jnp.float32)],
+            out_specs=pl.BlockSpec(
+                (1, WINDOW, nt), lambda j, i, kk, r: (r[i], 0, j)),
         ),
-        out_shape=jax.ShapeDtypeStruct((nwin, WINDOW, n), jnp.float32),
-        input_output_aliases={2: 0},  # C-init buffer becomes the output
+        out_shape=jax.ShapeDtypeStruct((n_active, WINDOW, n), jnp.float32),
         interpret=interpret,
-    )(tc_window, tc_cols, cinit, tc_vals, b)
-    return out.reshape(nwin * WINDOW, n)
+    )(tc_rank, tc_vals, tc_cols, b)
+    return out.reshape(n_active * WINDOW, n)

@@ -1,15 +1,25 @@
 """VPU (CUDA-core analogue) SpMM path as a Pallas TPU kernel.
 
-One grid step processes one residual tile: ``TS`` non-zeros of a single
-output row, computing ``p = Σ_j vals[j] · B[cols[j], :]`` with element-wise
-multiply-accumulate — no MXU, no zero-vector padding redundancy. This is
-the paper's CUDA-core stream: fine-granularity skipping of zeros.
+One grid step processes one residual tile against one k-tile of B:
+``TS`` non-zeros of a single output row, computing
+``p = Σ_j vals[j] · B[cols[j], :]`` with element-wise multiply-accumulate —
+no MXU, no zero-vector padding redundancy. This is the paper's CUDA-core
+stream: fine-granularity skipping of zeros.
 
-Tiles write *partials*; the deterministic segment-sum combine in ops.py
-plays the role of atomicAdd (only tiles flagged ``atomic`` actually need
-it — short tiles own their row exclusively, mirroring the short/long tile
-split of §4.3, but on TPU the single fused scatter-add is bitwise
-deterministic either way).
+Single-pass edition:
+
+* **k-tiled B streaming.** A third grid dimension walks k-tiles of B with
+  the revisited output row as the accumulator carry, so only ``(kt, nt)``
+  of B is VMEM-resident (matches the MXU kernel; large-k safe).
+* **Vectorized gather.** The ``TS`` B-rows of a tile are fetched with one
+  batched ``take`` on the resident k-tile; values whose source row lies
+  outside the current k-tile are masked to zero, so every non-zero is
+  counted exactly once across the k sweep.
+
+Tiles write *partials*; the single fused scatter-accumulate in ops.py
+plays the role of atomicAdd (tiles are row-sorted by preprocessing, and on
+TPU the one deterministic scatter replaces the paper's short/long-tile
+store-vs-atomic split of §4.3 bitwise-reproducibly).
 """
 from __future__ import annotations
 
@@ -18,53 +28,57 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(cols_ref, vals_ref, b_ref, out_ref, acc_ref):
-    i = pl.program_id(1)  # tile index
-    ts = vals_ref.shape[1]
+def _kernel(vals_ref, cols_ref, b_ref, out_ref):
+    kk = pl.program_id(2)  # k-tile index (fastest)
+    kt = b_ref.shape[0]
 
-    acc_ref[...] = jnp.zeros_like(acc_ref)
+    cols = cols_ref[0]                       # (ts,) i32, global B-row ids
+    local = cols - kk * kt
+    in_tile = (local >= 0) & (local < kt)
+    gathered = jnp.take(b_ref[...], jnp.clip(local, 0, kt - 1), axis=0)
+    w = jnp.where(in_tile, vals_ref[0], 0.0)  # (ts,)
+    partial = jnp.sum(w[:, None] * gathered, axis=0, keepdims=True)  # (1, nt)
 
-    def body(jj, _):
-        # One gathered row × scalar value, accumulated on the VPU.
-        row = cols_ref[i, jj]
-        v = vals_ref[0, jj]
-        acc_ref[...] += v * b_ref[pl.ds(row, 1), :]
-        return ()
+    @pl.when(kk == 0)
+    def _():
+        out_ref[...] = partial
 
-    jax.lax.fori_loop(0, ts, body, ())
-    out_ref[...] = acc_ref[...]
+    @pl.when(kk != 0)
+    def _():
+        out_ref[...] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("nt", "interpret"))
-def spmm_vpu(vpu_vals, vpu_cols, b, *, nt: int = 128, interpret: bool = True):
-    """Per-tile partial rows, shape ``(ntiles, n)`` (combine via segment_sum).
+@functools.partial(jax.jit, static_argnames=("nt", "kt", "interpret"))
+def spmm_vpu(vpu_vals, vpu_cols, b, *, nt: int = 128, kt: int | None = None,
+             interpret: bool = True):
+    """Per-tile partial rows, shape ``(ntiles, n)`` (combined by the fused
+    scatter-accumulate in ops.py).
 
     Args:
       vpu_vals: (ntiles, ts) f32 residual non-zero values (zero padded).
       vpu_cols: (ntiles, ts) i32 column of each value (0 where padded).
-      b: (k, n) dense matrix; n must be a multiple of ``nt``.
+      b: (k, n) dense matrix; n multiple of ``nt``, k multiple of ``kt``.
+      kt: B k-tile rows per grid step (defaults to all of k resident).
     """
-    ntiles, _ = vpu_vals.shape
+    ntiles, ts = vpu_vals.shape
     k, n = b.shape
+    kt = k if kt is None else kt
     assert n % nt == 0, (n, nt)
-    grid = (n // nt, ntiles)
+    assert k % kt == 0, (k, kt)
+    grid = (n // nt, ntiles, k // kt)
 
     out = pl.pallas_call(
         _kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, vpu_vals.shape[1]), lambda j, i, c: (i, 0)),
-                pl.BlockSpec((k, nt), lambda j, i, c: (0, j)),
-            ],
-            out_specs=pl.BlockSpec((1, nt), lambda j, i, c: (i, j)),
-            scratch_shapes=[pltpu.VMEM((1, nt), jnp.float32)],
-        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ts), lambda j, i, kk: (i, 0)),
+            pl.BlockSpec((1, ts), lambda j, i, kk: (i, 0)),
+            pl.BlockSpec((kt, nt), lambda j, i, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, nt), lambda j, i, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((ntiles, n), jnp.float32),
         interpret=interpret,
-    )(vpu_cols, vpu_vals, b)
+    )(vpu_vals, vpu_cols, b)
     return out

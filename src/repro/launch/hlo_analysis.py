@@ -185,12 +185,19 @@ def _dot_flops(ls: str, table) -> float:
     for _, dims in out_shapes:
         for d in dims:
             out_elems *= d
-    # contracting size from lhs operand
-    lhs_m = re.search(r"dot\(%?([\w\.\-]+)", rhs)
+    # contracting size from the lhs operand. Modern HLO writes operands
+    # with inline types — ``dot(f32[16,32]{1,0} %arg, ...)`` — older/hand
+    # HLO writes bare names — ``dot(%arg, %arg)``; handle both: prefer the
+    # inline shape, fall back to the symbol table.
     cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
     contract = 1
-    if lhs_m and cd_m:
-        shapes = table.get(lhs_m.group(1)) or []
+    if cd_m:
+        inline_m = re.search(r"dot\(\s*(\w+\[[\d,]*\])", rhs)
+        if inline_m:
+            shapes = _shapes_in(inline_m.group(1))
+        else:
+            nm = re.search(r"dot\(\s*%?([\w\.\-]+)", rhs)
+            shapes = (table.get(nm.group(1)) if nm else None) or []
         if shapes:
             dims = shapes[0][1]
             for i in cd_m.group(1).split(","):

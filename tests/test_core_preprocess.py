@@ -2,7 +2,10 @@
 distribution correctness, balance decomposition — incl. hypothesis sweeps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property sweeps need hypothesis (optional dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import preprocess
 from repro.core.balance import BalanceParams, decompose_counts

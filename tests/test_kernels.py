@@ -23,32 +23,39 @@ def _rand(rng, *shape):
     return rng.standard_normal(shape).astype(np.float32)
 
 
-@pytest.mark.parametrize("nb,bk,k,n,nt", [
-    (1, 8, 32, 128, 128),
-    (5, 16, 64, 128, 64),
-    (9, 32, 128, 256, 128),
+@pytest.mark.parametrize("nb,bk,k,n,nt,kt", [
+    (1, 8, 32, 128, 128, None),
+    (5, 16, 64, 128, 64, 32),
+    (9, 32, 128, 256, 128, 32),
 ])
-def test_spmm_mxu_matches_ref(rng, nb, bk, k, n, nt):
+def test_spmm_mxu_matches_compact_ref(rng, nb, bk, k, n, nt, kt):
     nwin = 4
     window = np.sort(rng.integers(0, nwin, nb)).astype(np.int32)
+    active = np.unique(window)
+    rank = np.searchsorted(active, window).astype(np.int32)
     cols = rng.integers(0, k, (nb, bk)).astype(np.int32)
     vals = _rand(rng, nb, WINDOW, bk)
     b = _rand(rng, k, n)
-    out = spmm_mxu(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(window),
-                   jnp.asarray(b), nwin=nwin, nt=nt, interpret=True)
-    expect = ref.spmm_tc_ref(jnp.asarray(vals), jnp.asarray(cols),
-                             jnp.asarray(window), jnp.asarray(b), nwin)
+    out = spmm_mxu(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(rank),
+                   jnp.asarray(b), n_active=active.size, nt=nt, kt=kt,
+                   interpret=True)
+    expect = ref.spmm_tc_compact_ref(jnp.asarray(vals), jnp.asarray(cols),
+                                     jnp.asarray(rank), jnp.asarray(b),
+                                     active.size)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("ntiles,ts,k,n", [(1, 8, 16, 128), (7, 32, 64, 128)])
-def test_spmm_vpu_matches_ref(rng, ntiles, ts, k, n):
+@pytest.mark.parametrize("ntiles,ts,k,n,kt", [
+    (1, 8, 16, 128, None),
+    (7, 32, 64, 128, 16),
+])
+def test_spmm_vpu_matches_ref(rng, ntiles, ts, k, n, kt):
     vals = _rand(rng, ntiles, ts)
     cols = rng.integers(0, k, (ntiles, ts)).astype(np.int32)
     b = _rand(rng, k, n)
     out = spmm_vpu(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(b),
-                   nt=128, interpret=True)
+                   nt=128, kt=kt, interpret=True)
     gathered = b[cols]
     expect = np.einsum("tj,tjn->tn", vals, gathered)
     np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-4)

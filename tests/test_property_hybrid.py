@@ -3,7 +3,10 @@ for arbitrary sparsity patterns, thresholds, and dtypes."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property sweeps need hypothesis (optional dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.sddmm import LibraSDDMM
 from repro.core.spmm import LibraSpMM
