@@ -16,6 +16,7 @@ def run() -> list[tuple]:
     rows = []
     rng = np.random.default_rng(2)
     ups = []
+    first = True
     for name, a in corpus().items():
         x = jnp.asarray(rng.standard_normal((a.m, K)).astype(np.float32))
         y = jnp.asarray(rng.standard_normal((a.k, K)).astype(np.float32))
@@ -28,9 +29,17 @@ def run() -> list[tuple]:
         t_dense = timeit(jax.jit(dense_sampled), x, y)
         res = {}
         for mode in ("hybrid", "tcu", "vpu"):
-            op = LibraSDDMM(a, mode=mode)
+            op = LibraSDDMM(a, mode=mode, tune="off")
             res[mode] = timeit(lambda: op(x, y))
         t_h = res["hybrid"]
+        if first:  # default matrix: model-tuned vs hardcoded defaults
+            first = False
+            op_m = LibraSDDMM(a, tune="model", tune_kf=K)
+            t_m = timeit(lambda: op_m(x, y))
+            cfg = op_m.tune_config
+            rows.append((f"sddmm/{name}/tuned_model", t_m * 1e6,
+                         f"thr{cfg.threshold}_kf{cfg.kf_tile}_yt{cfg.yt}"
+                         f"_x{t_h / t_m:.2f}"))
         rows.append((f"sddmm/{name}/hybrid", t_h * 1e6,
                      f"{sddmm_gflops(a.nnz, K, t_h):.2f}GF"))
         rows.append((f"sddmm/{name}/tcu_only", res["tcu"] * 1e6,

@@ -1,6 +1,10 @@
 """Paper Fig. 9 / Tab. 4: SpMM throughput, Libra hybrid vs single-resource
-modes vs framework baselines (dense jnp matmul, BCOO sparse)."""
+modes vs framework baselines (dense jnp matmul, BCOO sparse), plus
+tuned-vs-default rows for the autotuner (`repro.tune`) on the default
+bench matrix."""
 from __future__ import annotations
+
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +25,49 @@ def _pallas_bytes_accessed(op: LibraSpMM, b) -> float:
     from repro.launch import hlo_analysis as H
 
     lowered = spmm_apply.lower(op.arrays, b, m=op.m, nwin=op.nwin,
-                               backend="pallas", interpret=True)
+                               backend="pallas", cfg=op.tune_config,
+                               interpret=True)
     return float(H.analyze_hlo(lowered.compile().as_text()).hbm_bytes)
+
+
+def _tuned_rows(name: str, a, b, t_default: float) -> list[tuple]:
+    """Tuned-vs-default rows on the default bench matrix: the analytical
+    model pick and the (fresh-cache) empirical search pick, each as a
+    speedup over the hardcoded-default config. Search always includes
+    the default config as candidate #0, so x ≥ 1.0 up to timer noise;
+    when search picks a config identical to the default the default's
+    own measurement is reused (same executable)."""
+    from repro.tune import PlanCache, occupancy_report, vmem_spmm_bytes
+
+    rows = []
+    op_m = LibraSpMM(a, tune="model")
+    t_model = timeit(lambda: op_m(b))
+    cfg = op_m.tune_config
+    occ = occupancy_report(vmem_spmm_bytes(
+        cfg, bk=op_m.plan.tc.bk, ts=op_m.plan.vpu.ts))
+    rows.append((f"spmm/{name}/tuned_model", t_model * 1e6,
+                 f"thr{cfg.threshold}_kt{cfg.kt}_nt{cfg.nt}"
+                 f"_vmem{occ['bytes_per_step'] // 1024}KB"
+                 f"_x{t_default / t_model:.2f}"))
+    with tempfile.TemporaryDirectory() as d:
+        op_s = LibraSpMM(a, tune="search", tune_cache=PlanCache(d))
+    cfg_s = op_s.tune_config
+    from repro.core import preprocess as P
+
+    # On the default XLA timing backend the executable depends only on
+    # the plan parameters (tile fields are inert there) — when those
+    # match the hardcoded defaults, reuse the default's measurement
+    # instead of re-timing the identical executable.
+    if (cfg_s.threshold == P.DEFAULT_SPMM_THRESHOLD
+            and (cfg_s.bk or P.DEFAULT_BK_SPMM) == P.DEFAULT_BK_SPMM
+            and (cfg_s.ts_tile or 32) == 32):
+        t_search = t_default
+    else:
+        t_search = timeit(lambda: op_s(b))
+    rows.append((f"spmm/{name}/tuned_search", t_search * 1e6,
+                 f"thr{cfg_s.threshold}_kt{cfg_s.kt}"
+                 f"_x{t_default / t_search:.2f}"))
+    return rows
 
 
 def run() -> list[tuple]:
@@ -40,7 +85,9 @@ def run() -> list[tuple]:
         results = {}
         ops = {}
         for mode in ("hybrid", "tcu", "vpu"):
-            op = LibraSpMM(a, mode=mode)
+            # tune="off" keeps these rows the hardcoded-default baseline
+            # the tuned_* rows are measured against.
+            op = LibraSpMM(a, mode=mode, tune="off")
             ops[mode] = op
             results[mode] = timeit(lambda: op(b))
         t_hyb = results["hybrid"]
@@ -56,10 +103,11 @@ def run() -> list[tuple]:
                      f"x{t_bcoo / t_hyb:.2f}"))
         speedups_vs_dense.append(t_dense / t_hyb)
         speedups_vs_bcoo.append(t_bcoo / t_hyb)
-        if first:  # default matrix: track the fused-path memory footprint
+        if first:  # default matrix: fused-path memory + tuned-vs-default
             first = False
             rows.append((f"spmm/{name}/pallas_bytes_accessed", 0.0,
                          f"{_pallas_bytes_accessed(ops['hybrid'], b):.0f}B"))
+            rows.extend(_tuned_rows(name, a, b, t_hyb))
     rows.append(("spmm/gmean_speedup_vs_dense", 0.0,
                  f"{np.exp(np.mean(np.log(speedups_vs_dense))):.2f}x"))
     rows.append(("spmm/gmean_speedup_vs_bcoo", 0.0,

@@ -1,10 +1,12 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV and
-# optionally writes the same rows as machine-readable JSON (--json) so the
+# optionally writes the same rows as machine-readable JSON (--json for one
+# combined file, --json-dir for one BENCH_<suite>.json per suite) so the
 # perf trajectory accumulates across PRs.
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -17,6 +19,9 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON: "
                          "[{name, us_per_call, derived}, ...]")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="also write one BENCH_<suite>.json per suite "
+                         "(same row schema as --json)")
     args = ap.parse_args()
     from benchmarks import (
         bench_ablations,
@@ -45,28 +50,40 @@ def main() -> None:
         # case the run is interrupted before the final dump)
         with open(args.json, "a"):
             pass
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failed = False
     records: list[dict] = []
+    by_suite: dict[str, list[dict]] = {}
     for name, fn in suites.items():
         if name not in only:
             continue
+        suite_records = by_suite.setdefault(name, [])
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
-                records.append(
-                    {"name": row_name, "us_per_call": round(us, 1),
-                     "derived": derived})
+                rec = {"name": row_name, "us_per_call": round(us, 1),
+                       "derived": derived}
+                records.append(rec)
+                suite_records.append(rec)
         except Exception:
             failed = True
             print(f"{name},0.0,ERROR", flush=True)
-            records.append({"name": name, "us_per_call": 0.0,
-                            "derived": "ERROR"})
+            rec = {"name": name, "us_per_call": 0.0, "derived": "ERROR"}
+            records.append(rec)
+            suite_records.append(rec)
             traceback.print_exc()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)
             f.write("\n")
+    if args.json_dir:
+        for suite, recs in by_suite.items():
+            with open(os.path.join(args.json_dir,
+                                   f"BENCH_{suite}.json"), "w") as f:
+                json.dump(recs, f, indent=1)
+                f.write("\n")
     if failed:
         sys.exit(1)
 

@@ -18,7 +18,10 @@ def main() -> None:
 
     # --- SpMM: C = A @ B ------------------------------------------------
     b = jnp.asarray(rng.standard_normal((a.k, 128)).astype(np.float32))
-    spmm = LibraSpMM(a)                       # preprocess once
+    spmm = LibraSpMM(a)                       # preprocess + autotune once
+    cfg = spmm.tune_config                    # the model-tuned plan choice
+    print(f"tuned: threshold={cfg.threshold} kt={cfg.kt} nt={cfg.nt} "
+          f"grid_order={cfg.grid_order} (source={cfg.source})")
     c = spmm(b)                               # fast XLA path
     c_pallas = spmm(b, backend="pallas")      # Pallas TPU kernels (interpret)
     oracle = ref.spmm_dense_oracle(a.to_dense(), np.asarray(b))

@@ -1,12 +1,30 @@
-from repro.core.spmm import LibraSpMM
-from repro.core.sddmm import LibraSDDMM
-from repro.core.preprocess import preprocess_spmm, preprocess_sddmm
-from repro.core.windows import nnz1_fraction
+"""Algorithm layer: distribution, preprocessing, public operators.
 
-__all__ = [
-    "LibraSpMM",
-    "LibraSDDMM",
-    "preprocess_spmm",
-    "preprocess_sddmm",
-    "nnz1_fraction",
-]
+Exports resolve lazily (PEP 562) so that leaf modules
+(:mod:`repro.core.formats`, :mod:`repro.core.threshold`) stay importable
+from :mod:`repro.tune` without dragging in the operator modules — the
+operators import the tuner, so an eager import here would be circular.
+"""
+_EXPORTS = {
+    "LibraSpMM": ("repro.core.spmm", "LibraSpMM"),
+    "LibraSDDMM": ("repro.core.sddmm", "LibraSDDMM"),
+    "preprocess_spmm": ("repro.core.preprocess", "preprocess_spmm"),
+    "preprocess_sddmm": ("repro.core.preprocess", "preprocess_sddmm"),
+    "nnz1_fraction": ("repro.core.windows", "nnz1_fraction"),
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        modname, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+
+    return getattr(importlib.import_module(modname), attr)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

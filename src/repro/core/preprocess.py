@@ -27,11 +27,21 @@ from repro.core.formats import (
 )
 from repro.core.windows import extract_windows, num_windows
 from repro.sparse.matrix import SparseCSR
+from repro.tune.model import TuneConfig
 
 DEFAULT_SPMM_THRESHOLD = 3    # paper Fig. 11: optimal ≈ 3 for 8×1 vectors
 DEFAULT_SDDMM_THRESHOLD = 24  # paper Fig. 11: optimal ≈ 24 for 8×16 blocks
 DEFAULT_BK_SPMM = 32          # condensed block depth (MXU k granularity)
 DEFAULT_BK_SDDMM = 16         # paper: 8×16 TC blocks for SDDMM
+
+
+def _resolve(explicit, cfg_value, default):
+    """Plan parameters resolve explicit arg > TuneConfig field > default."""
+    if explicit is not None:
+        return explicit
+    if cfg_value is not None:
+        return cfg_value
+    return default
 
 
 def _pad_blocks(vals, cols, bitmap, window, atomic, nnz, bk, pos=None) -> TCBlocks:
@@ -57,10 +67,11 @@ def _pad_blocks(vals, cols, bitmap, window, atomic, nnz, bk, pos=None) -> TCBloc
 
 def preprocess_spmm(
     a: SparseCSR,
-    threshold: int = DEFAULT_SPMM_THRESHOLD,
-    bk: int = DEFAULT_BK_SPMM,
-    ts_tile: int = 32,
+    threshold: int | None = None,
+    bk: int | None = None,
+    ts_tile: int | None = None,
     balance: BalanceParams | None = None,
+    cfg: TuneConfig | None = None,
 ) -> SpMMPlan:
     """2D-aware distribution at vector granularity + hybrid balancing.
 
@@ -68,12 +79,20 @@ def preprocess_spmm(
     formulation of the paper's GPU preprocessing kernels): no per-element
     Python. Produces bit-identical plans to :func:`preprocess_spmm_loop`.
 
+    Plan parameters (``threshold``/``bk``/``ts_tile``) come from a tuned
+    :class:`~repro.tune.model.TuneConfig` when one is passed — explicit
+    arguments still win, module defaults back-stop both.
+
     Output ordering contracts consumed by the single-pass apply path:
     TC blocks are window-sorted (so :class:`TCBlocks` derives the dense
     compaction rank map) and VPU residual tiles are row-sorted, which
     keeps the fused scatter-accumulate epilogue's updates
     window-contiguous instead of random-access.
     """
+    threshold = _resolve(threshold, cfg and cfg.threshold,
+                         DEFAULT_SPMM_THRESHOLD)
+    bk = _resolve(bk, cfg and cfg.bk, DEFAULT_BK_SPMM)
+    ts_tile = _resolve(ts_tile, cfg and cfg.ts_tile, 32)
     balance = balance or BalanceParams()
     nwin = num_windows(a.m)
     rows, cols, vals = a.to_coo()
@@ -377,12 +396,21 @@ def _preprocess_spmm_semivectorized(
 
 def preprocess_sddmm(
     a: SparseCSR,
-    threshold: int = DEFAULT_SDDMM_THRESHOLD,
-    bk: int = DEFAULT_BK_SDDMM,
-    ts_tile: int = 32,
+    threshold: int | None = None,
+    bk: int | None = None,
+    ts_tile: int | None = None,
     balance: BalanceParams | None = None,
+    cfg: TuneConfig | None = None,
 ) -> SDDMMPlan:
-    """Block-granularity distribution for SDDMM (densest-first packing)."""
+    """Block-granularity distribution for SDDMM (densest-first packing).
+
+    Like :func:`preprocess_spmm`, plan parameters resolve explicit arg >
+    ``cfg`` (a tuned :class:`~repro.tune.model.TuneConfig`) > default.
+    """
+    threshold = _resolve(threshold, cfg and cfg.threshold,
+                         DEFAULT_SDDMM_THRESHOLD)
+    bk = _resolve(bk, cfg and cfg.bk, DEFAULT_BK_SDDMM)
+    ts_tile = _resolve(ts_tile, cfg and cfg.ts_tile, 32)
     balance = balance or BalanceParams()
     wvs = extract_windows(a)
     nwin = num_windows(a.m)

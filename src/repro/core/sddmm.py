@@ -3,6 +3,16 @@
 Output follows the canonical CSR (row-major, column-sorted) non-zero
 order of the mask matrix, so GNN attention pipelines can chain
 ``SDDMM → softmax-by-row → SpMM`` without reindexing.
+
+Autotuning (the ``tune=`` knob — see :class:`repro.core.spmm.LibraSpMM`
+for the full semantics): ``"model"`` (default) picks the block
+threshold from the matrix's vector histogram and sizes the feature tile
+(``kf_tile``) and the Y row panel (``yt``) to the VMEM budget;
+``"search"`` times a candidate grid and memoizes the winner in the
+persistent plan cache; ``"off"`` keeps the hardcoded defaults; a
+:class:`~repro.tune.model.TuneConfig` instance is used as-is. Explicit
+``threshold=``/forcing ``mode=`` always win over the tuner's threshold.
+The chosen config is exposed as ``op.tune_config``.
 """
 from __future__ import annotations
 
@@ -12,8 +22,9 @@ import numpy as np
 from repro.core import preprocess
 from repro.core.formats import SDDMMPlan, device_arrays
 from repro.core.spmm import Mode
-from repro.kernels.ops import sddmm_apply
+from repro.kernels.ops import cached_compile, sddmm_apply
 from repro.sparse.matrix import SparseCSR
+from repro.tune import TuneConfig, tune_sddmm
 
 
 def threshold_for_mode(mode: Mode, bk: int, threshold: int | None = None) -> int:
@@ -29,34 +40,42 @@ class LibraSDDMM:
 
     def __init__(self, a: SparseCSR, mode: Mode = "hybrid",
                  threshold: int | None = None,
-                 bk: int = preprocess.DEFAULT_BK_SDDMM, ts_tile: int = 32,
-                 balance=None):
+                 bk: int | None = None, ts_tile: int | None = None,
+                 balance=None, tune: str | TuneConfig = "model",
+                 tune_cache=None, tune_kf: int = 128,
+                 tune_backend: str = "xla"):
         self.m, self.k = a.shape
         self.nnz = a.nnz
         self.mode = mode
+        bk_eff = preprocess.DEFAULT_BK_SDDMM if bk is None else bk
+        forced = (threshold_for_mode(mode, bk_eff, threshold)
+                  if mode != "hybrid" else threshold)
+        self.tune_config: TuneConfig = tune_sddmm(
+            a, mode=mode, threshold=forced, tune=tune, kf=tune_kf,
+            backend=tune_backend, cache=tune_cache, bk=bk, ts_tile=ts_tile)
+        thr = threshold_for_mode(mode, bk_eff, self.tune_config.threshold)
         self.plan: SDDMMPlan = preprocess.preprocess_sddmm(
-            a, threshold_for_mode(mode, bk, threshold), bk=bk, ts_tile=ts_tile,
-            balance=balance,
+            a, thr, bk=bk, ts_tile=ts_tile, balance=balance,
+            cfg=self.tune_config,
         )
         self.arrays = device_arrays(self.plan)
         # CSR structure for chaining into softmax/SpMM.
         self.indptr = np.asarray(a.indptr)
         self.indices = np.asarray(a.indices)
-        # Per-operator apply cache (see LibraSpMM): one AOT-compiled
-        # executable per (kf, dtype, backend); plan arrays stay arguments.
+        # Per-operator AOT apply cache keyed (kf, dtype, backend, ...) —
+        # see kernels.ops.cached_compile.
         self._apply_cache: dict = {}
 
     def __call__(self, x: jnp.ndarray, y: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
         assert x.shape[0] >= self.m and y.shape[0] >= self.k
-        key = (x.shape[1], str(x.dtype), backend, interpret,
-               x.shape[0], y.shape[0])
-        fn = self._apply_cache.get(key)
-        if fn is None:
-            fn = sddmm_apply.lower(self.arrays, x, y, nnz=self.nnz,
-                                   backend=backend,
-                                   interpret=interpret).compile()
-            self._apply_cache[key] = fn
+        fn = cached_compile(
+            self._apply_cache,
+            (x.shape[1], str(x.dtype), backend, interpret,
+             x.shape[0], y.shape[0]),
+            lambda: sddmm_apply.lower(self.arrays, x, y, nnz=self.nnz,
+                                      backend=backend, cfg=self.tune_config,
+                                      interpret=interpret))
         return fn(self.arrays, x, y)
 
     @property

@@ -2,7 +2,7 @@
 
 Usage::
 
-    op = LibraSpMM(a_csr)            # preprocess once (paper §4.5)
+    op = LibraSpMM(a_csr)            # preprocess + autotune once (§4.5)
     c = op(b)                        # reuse every iteration
     c = op(b, backend="pallas")      # run the TPU kernels (interpret on CPU)
 
@@ -10,6 +10,29 @@ Single-resource ablation modes (paper §5.4.1) are exposed through the
 threshold: ``mode="tcu"`` forces every vector to the MXU path,
 ``mode="vpu"`` forces everything to the VPU path, ``mode="hybrid"`` uses
 the 2D-aware distribution.
+
+Autotuning (the ``tune=`` knob, paper §4.2's 2D-aware choices made
+per matrix instead of hardcoded):
+
+* ``tune="model"`` (default) — the analytical occupancy model in
+  :mod:`repro.tune` picks the TC/VPU threshold from the matrix's vector
+  histogram and sizes ``kt``/``nt``/grid order to the VMEM budget.
+  Cheap (one feature pass, no timing).
+* ``tune="search"`` — empirically times a small candidate grid through
+  this apply path and keeps the argmin; memoized in the persistent
+  :class:`~repro.tune.cache.PlanCache` (``tune_cache=`` overrides the
+  cache dir / instance) so re-constructing the same operator never
+  re-times. The hardcoded default config is always a candidate, so
+  search can't lose to it.
+* ``tune="off"`` — the pre-tuner hardcoded defaults.
+* ``tune=TuneConfig(...)`` — exactly that config (expert escape hatch).
+
+An explicit ``threshold=`` (or a forcing ``mode=``) always wins over the
+tuner's threshold; the tuner then only sizes tiles. ``tune_backend=``
+selects which backend the search times (default ``"xla"``; pass
+``"pallas"`` to let tile/grid-order candidates compete — on the XLA
+reference path those fields are inert, so its candidate grid is
+threshold-only). The chosen config is exposed as ``op.tune_config``.
 """
 from __future__ import annotations
 
@@ -20,8 +43,9 @@ import jax.numpy as jnp
 from repro.core import preprocess
 from repro.core.formats import WINDOW, SpMMPlan, device_arrays
 from repro.core.windows import num_windows
-from repro.kernels.ops import spmm_apply
+from repro.kernels.ops import cached_compile, spmm_apply
 from repro.sparse.matrix import SparseCSR
+from repro.tune import TuneConfig, tune_spmm
 
 Mode = Literal["hybrid", "tcu", "vpu"]
 
@@ -38,33 +62,41 @@ class LibraSpMM:
     """Preprocess-once, apply-many hybrid SpMM operator."""
 
     def __init__(self, a: SparseCSR, mode: Mode = "hybrid",
-                 threshold: int | None = None, bk: int = preprocess.DEFAULT_BK_SPMM,
-                 ts_tile: int = 32, balance=None):
+                 threshold: int | None = None, bk: int | None = None,
+                 ts_tile: int | None = None, balance=None,
+                 tune: str | TuneConfig = "model",
+                 tune_cache=None, tune_n: int = 128,
+                 tune_backend: str = "xla"):
         self.m, self.k = a.shape
         self.nwin = num_windows(a.m)
         self.mode = mode
+        # Forced single-resource modes pin the threshold before tuning;
+        # the tuner then only sizes tiles / grid order.
+        forced = (threshold_for_mode(mode, threshold)
+                  if mode != "hybrid" else threshold)
+        self.tune_config: TuneConfig = tune_spmm(
+            a, mode=mode, threshold=forced, tune=tune, n=tune_n,
+            backend=tune_backend, cache=tune_cache, bk=bk, ts_tile=ts_tile)
+        thr = threshold_for_mode(mode, self.tune_config.threshold)
         self.plan: SpMMPlan = preprocess.preprocess_spmm(
-            a, threshold_for_mode(mode, threshold), bk=bk, ts_tile=ts_tile,
-            balance=balance,
+            a, thr, bk=bk, ts_tile=ts_tile, balance=balance,
+            cfg=self.tune_config,
         )
         self.arrays = device_arrays(self.plan)
-        # Per-operator apply cache: one AOT-compiled executable per
-        # (n, dtype, backend). Repeated calls invoke the executable
-        # directly, skipping jit dispatch + re-tracing entirely; plan
-        # arrays stay call arguments (one device copy, never baked into
-        # the executable as constants).
+        # Per-operator AOT apply cache keyed (n, dtype, backend, ...) —
+        # see kernels.ops.cached_compile.
         self._apply_cache: dict = {}
 
     def __call__(self, b: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
         assert b.shape[0] == self.k, (b.shape, self.k)
-        key = (b.shape[1], str(b.dtype), backend, interpret)
-        fn = self._apply_cache.get(key)
-        if fn is None:
-            fn = spmm_apply.lower(self.arrays, b, m=self.m, nwin=self.nwin,
-                                  backend=backend,
-                                  interpret=interpret).compile()
-            self._apply_cache[key] = fn
+        fn = cached_compile(
+            self._apply_cache,
+            (b.shape[1], str(b.dtype), backend, interpret),
+            lambda: spmm_apply.lower(self.arrays, b, m=self.m,
+                                     nwin=self.nwin, backend=backend,
+                                     cfg=self.tune_config,
+                                     interpret=interpret))
         return fn(self.arrays, b)
 
     @property

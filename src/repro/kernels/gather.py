@@ -1,0 +1,34 @@
+"""Shared masked panel-gather for the streamed-operand kernels.
+
+All four kernels stream one dense operand (B rows for SpMM, Y rows for
+SDDMM) through VMEM in row panels and fetch the rows a block/tile needs
+with one batched ``take`` on the resident panel. Rows whose global id
+lives in another panel are masked to zero — each id belongs to exactly
+one panel, so summing the per-panel partials counts every contribution
+exactly once. This module is the single home of that exactly-once
+accounting (clamp + mask semantics), so a Mosaic-era change to the
+gather idiom lands in one place (see the ROADMAP hardware item).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def panel_gather(panel_ref, ids, panel_idx):
+    """Gather ``ids`` rows from the resident row panel, zero-masked.
+
+    Args:
+      panel_ref: Pallas ref of the resident ``(tile, lanes)`` panel —
+        panel ``panel_idx`` of the full operand.
+      ids: (g,) i32 *global* row ids to fetch.
+      panel_idx: current panel index along the streamed grid dimension.
+
+    Returns:
+      ``(rows, in_panel)``: (g, lanes) rows with out-of-panel rows
+      zeroed, and the (g,) bool residency mask.
+    """
+    tile = panel_ref.shape[0]
+    local = ids - panel_idx * tile
+    in_panel = (local >= 0) & (local < tile)
+    rows = jnp.take(panel_ref[...], jnp.clip(local, 0, tile - 1), axis=0)
+    return jnp.where(in_panel[:, None], rows, 0.0), in_panel

@@ -25,6 +25,11 @@ passes. The apply path here makes exactly one pass over every output byte:
 3. **Vectorized gathers.** All four kernels fetch their B/X/Y rows with
    batched ``take`` formulations on the resident panel — no per-row
    scalar DMA loops.
+0. **Tuned tiling.** Every tile-size / grid-order decision (``kt``,
+   ``nt``, ``kf_tile``, ``yt``, ``grid_order``) arrives as one static
+   :class:`repro.tune.model.TuneConfig` — emitted by the occupancy-aware
+   tuner in :mod:`repro.tune` (or its defaults when callers pass
+   nothing). No module constants.
 4. **Fused combine epilogue.** VPU residual tiles are row-sorted at
    preprocess time, and the TC scatter + VPU segment reduction + the
    TC/VPU add collapse into ONE ``scatter-add`` of the concatenated
@@ -46,8 +51,21 @@ from repro.kernels.sddmm_mxu import sddmm_mxu
 from repro.kernels.sddmm_vpu import sddmm_vpu
 from repro.kernels.spmm_mxu import spmm_mxu
 from repro.kernels.spmm_vpu import spmm_vpu
+from repro.tune.model import DEFAULT_TUNE, TuneConfig
 
-DEFAULT_KT = 512  # B k-tile rows resident per grid step (≈256 KB at nt=128)
+
+def cached_compile(cache: dict, key, lower):
+    """Per-operator AOT apply cache: one compiled executable per key.
+
+    Repeated calls invoke the executable directly, skipping jit dispatch
+    and re-tracing; plan arrays stay call arguments (one device copy,
+    never baked into the executable as constants). ``lower`` is a thunk
+    returning the lowered-but-uncompiled computation.
+    """
+    fn = cache.get(key)
+    if fn is None:
+        fn = cache[key] = lower().compile()
+    return fn
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -60,29 +78,37 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
-def _pick_kt(k: int, kt: int | None) -> int:
-    """Largest k-tile ≤ the request (whole k when it already fits)."""
-    kt = DEFAULT_KT if kt is None else kt
-    return min(kt, k)
-
-
 @functools.partial(
     jax.jit,
-    static_argnames=("m", "nwin", "backend", "nt", "kt", "interpret"),
+    static_argnames=("m", "nwin", "backend", "cfg", "interpret"),
 )
 def spmm_apply(arrs, b, *, m: int, nwin: int, backend: str = "xla",
-               nt: int = 128, kt: int | None = None, interpret: bool = True):
-    """Hybrid SpMM: C[m, n] = A_sp @ B using a preprocessed Libra plan."""
+               cfg: TuneConfig | None = None, interpret: bool = True):
+    """Hybrid SpMM: C[m, n] = A_sp @ B using a preprocessed Libra plan.
+
+    ``cfg`` carries every tile-size / grid-order decision (a
+    :class:`repro.tune.model.TuneConfig`); callers that pass nothing get
+    the library default — module constants no longer exist.
+    """
+    cfg = DEFAULT_TUNE if cfg is None else cfg
     n0 = b.shape[1]
     if backend == "xla":
         return ref.spmm_hybrid_ref(arrs, b, m, nwin)
-    ktile = _pick_kt(b.shape[0], kt)
+    nt = cfg.nt
+    ktile = min(cfg.kt, b.shape[0])
     b_p = _pad_to(_pad_to(b, 1, nt), 0, ktile)
     n_active = arrs["tc_active_row"].shape[0] // WINDOW
+    # block_outer is only legal with one TC block per compacted rank
+    # (see spmm_mxu docstring); downgrade silently otherwise — the
+    # shapes are static here, so this costs nothing at runtime.
+    nb = arrs["tc_vals"].shape[0]
+    order = cfg.grid_order if nb == n_active else "n_outer"
     tc = spmm_mxu(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_rank"], b_p,
-                  n_active=n_active, nt=nt, kt=ktile, interpret=interpret)
+                  n_active=n_active, nt=nt, kt=ktile, grid_order=order,
+                  interpret=interpret)
     partials = spmm_vpu(arrs["vpu_vals"], arrs["vpu_cols"], b_p, nt=nt,
-                        kt=ktile, interpret=interpret)
+                        kt=ktile, grid_order=cfg.grid_order,
+                        interpret=interpret)
     # Fused combine epilogue: one scatter-add of both streams' partials
     # into a single zero-initialized C (rows ≥ m from the padded last
     # window are sliced off; TC rows of empty-TC plans add only zeros).
@@ -94,23 +120,32 @@ def spmm_apply(arrs, b, *, m: int, nwin: int, backend: str = "xla",
 
 
 @functools.partial(
-    jax.jit, static_argnames=("nnz", "backend", "kf_tile", "interpret")
+    jax.jit, static_argnames=("nnz", "backend", "cfg", "interpret")
 )
 def sddmm_apply(arrs, x, y, *, nnz: int, backend: str = "xla",
-                kf_tile: int = 128, interpret: bool = True):
-    """Hybrid SDDMM: values[nnz] = sample(X @ Yᵀ) in canonical CSR order."""
+                cfg: TuneConfig | None = None, interpret: bool = True):
+    """Hybrid SDDMM: values[nnz] = sample(X @ Yᵀ) in canonical CSR order.
+
+    ``cfg.kf_tile`` tiles the feature dimension; ``cfg.yt`` streams Y in
+    row panels (padded here so panel count divides evenly — padded rows
+    are zeros and no real column index points at them).
+    """
+    cfg = DEFAULT_TUNE if cfg is None else cfg
     if backend == "xla":
         return ref.sddmm_hybrid_ref(arrs, _pad_to(x, 0, WINDOW), y, nnz)
     kf = x.shape[1]
+    kf_tile = cfg.kf_tile
     kt = min(kf_tile, kf) if kf % kf_tile else kf_tile
     if kf % kt:
         x = _pad_to(x, 1, kt)
         y = _pad_to(y, 1, kt)
     x_p = _pad_to(x, 0, WINDOW)
+    yt = None if cfg.yt is None else min(cfg.yt, y.shape[0])
+    y_p = y if yt is None else _pad_to(y, 0, yt)
     s_tc = sddmm_mxu(arrs["tc_cols"], arrs["tc_bitmap"], arrs["tc_window"],
-                     x_p, y, kf_tile=kt, interpret=interpret)
-    s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x, y, kf_tile=kt,
-                     interpret=interpret)
+                     x_p, y_p, kf_tile=kt, yt=yt, interpret=interpret)
+    s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x, y_p, kf_tile=kt,
+                     yt=yt, interpret=interpret)
     s_el = jnp.where(arrs["vpu_mask"], s_el, 0.0)
     # Fused combine: one scatter of both streams into the canonical nnz
     # vector (slot nnz swallows -1/masked padding).

@@ -7,10 +7,20 @@ tests its own bit of the 32-bit occupancy word, ``(bitmap >> sub) & 1``,
 which is the paper's per-thread ``(binary >> tid) & 1`` mapped onto the
 vector unit with zero divergence and no shared memory (§4.4, Fig. 8).
 
-The ``BK`` rows of Y are fetched with one batched ``take`` on the
-resident feature tile (vectorized gather — no per-row scalar loop), and
-the feature dimension is tiled (``kf_tile``) with in-VMEM accumulation so
-arbitrarily wide embeddings stream through a bounded working set.
+Both operand dimensions stream through bounded VMEM panels (k-tiling
+symmetry with the SpMM kernels):
+
+* the **feature dimension** is tiled (``kf_tile``) with in-VMEM
+  accumulation, so arbitrarily wide embeddings fit;
+* **Y rows** stream in ``(yt, kf_tile)`` panels on a third grid
+  dimension — the ``BK`` rows of a block are fetched with one batched
+  ``take`` on the resident panel, rows outside the panel masked to
+  zero (each block column lives in exactly one panel, so the sum over
+  panels counts every score term once). Huge ``kcols`` masks no longer
+  require a whole-Y VMEM residency.
+
+The bitmap sample is applied once, on the final (feature, Y-panel)
+visit of the block's accumulator.
 """
 from __future__ import annotations
 
@@ -22,14 +32,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import WINDOW
+from repro.kernels.gather import panel_gather
 
 
 def _kernel(window_ref, cols_ref, bitmap_ref, x_ref, y_ref, out_ref):
-    f = pl.program_id(1)  # feature tile index
+    f = pl.program_id(1)   # feature tile index
+    kk = pl.program_id(2)  # Y row-panel index (fastest)
     bk = cols_ref.shape[1]
 
-    # Batched gather of BK rows of Y (this feature tile).
-    gathered = jnp.take(y_ref[...], cols_ref[0], axis=0)  # (bk, kft)
+    # Batched gather of BK rows of Y from the resident (yt, kft) panel;
+    # rows living in another panel contribute zero this step.
+    gathered, _ = panel_gather(y_ref, cols_ref[0], kk)     # (bk, kft)
 
     # 8×KFt @ KFt×BK on the MXU.
     s = jax.lax.dot_general(
@@ -39,11 +52,15 @@ def _kernel(window_ref, cols_ref, bitmap_ref, x_ref, y_ref, out_ref):
         preferred_element_type=jnp.float32,
     )
 
-    @pl.when(f == 0)
+    first = jnp.logical_and(f == 0, kk == 0)
+    last = jnp.logical_and(f == pl.num_programs(1) - 1,
+                           kk == pl.num_programs(2) - 1)
+
+    @pl.when(first)
     def _():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    @pl.when(f == pl.num_programs(1) - 1)
+    @pl.when(last)
     def _():
         # Bit-Decoding sample on the final accumulation: sublane r keeps
         # column j iff bit r of bitmap[j] is set.
@@ -51,14 +68,15 @@ def _kernel(window_ref, cols_ref, bitmap_ref, x_ref, y_ref, out_ref):
         bits = (bitmap_ref[0][None, :].astype(jnp.uint32) >> sub) & jnp.uint32(1)
         out_ref[...] = jnp.where(bits > 0, out_ref[0] + s, 0.0)[None]
 
-    @pl.when(f != pl.num_programs(1) - 1)
+    @pl.when(jnp.logical_not(last))
     def _():
         out_ref[...] += s[None]
 
 
-@functools.partial(jax.jit, static_argnames=("kf_tile", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("kf_tile", "yt", "interpret"))
 def sddmm_mxu(tc_cols, tc_bitmap, tc_window, x, y, *, kf_tile: int = 128,
-              interpret: bool = True):
+              yt: int | None = None, interpret: bool = True):
     """Bitmap-sampled block scores, shape ``(nb, 8, bk)``.
 
     Args:
@@ -66,11 +84,16 @@ def sddmm_mxu(tc_cols, tc_bitmap, tc_window, x, y, *, kf_tile: int = 128,
       tc_bitmap: (nb, bk) u32 8-bit occupancy words.
       tc_window: (nb,) i32 window (row-block) ids.
       x: (nwin*8, kf) dense rows; y: (kcols, kf) dense rows.
+      yt: Y rows resident per grid step (``None`` = all of Y resident);
+          ``kcols`` must be a multiple of ``yt`` (ops.py pads).
     """
     nb, bk = tc_cols.shape
     kf = x.shape[1]
+    kcols = y.shape[0]
+    yt = kcols if yt is None else min(yt, kcols)
     assert kf % kf_tile == 0, (kf, kf_tile)
-    grid = (nb, kf // kf_tile)
+    assert kcols % yt == 0, (kcols, yt)
+    grid = (nb, kf // kf_tile, kcols // yt)
     xw = x.reshape(-1, WINDOW, kf)
 
     out = pl.pallas_call(
@@ -79,12 +102,14 @@ def sddmm_mxu(tc_cols, tc_bitmap, tc_window, x, y, *, kf_tile: int = 128,
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, bk), lambda i, f, w: (i, 0)),
-                pl.BlockSpec((1, bk), lambda i, f, w: (i, 0)),
-                pl.BlockSpec((1, WINDOW, kf_tile), lambda i, f, w: (w[i], 0, f)),
-                pl.BlockSpec((y.shape[0], kf_tile), lambda i, f, w: (0, f)),
+                pl.BlockSpec((1, bk), lambda i, f, kk, w: (i, 0)),
+                pl.BlockSpec((1, bk), lambda i, f, kk, w: (i, 0)),
+                pl.BlockSpec((1, WINDOW, kf_tile),
+                             lambda i, f, kk, w: (w[i], 0, f)),
+                pl.BlockSpec((yt, kf_tile), lambda i, f, kk, w: (kk, f)),
             ],
-            out_specs=pl.BlockSpec((1, WINDOW, bk), lambda i, f, w: (i, 0, 0)),
+            out_specs=pl.BlockSpec((1, WINDOW, bk),
+                                   lambda i, f, kk, w: (i, 0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((nb, WINDOW, bk), jnp.float32),
         interpret=interpret,

@@ -2,11 +2,18 @@
 
 One grid step processes a tile of ``TS`` isolated non-zero elements:
 ``s[j] = ⟨X[rows[j]], Y[cols[j]]⟩``. The ``TS`` X-rows and Y-rows of a
-tile are fetched with two batched ``take``s on the resident feature tiles
-(vectorized gather — the paper's CUDA-core stream with Float4 chunks →
-128-lane VMEM rows here, but without the per-element scalar loop); the
-dot reduction runs on the VPU. The feature dimension is tiled with
-accumulation so the working set stays bounded.
+tile are fetched with two batched ``take``s on the resident feature
+tiles (vectorized gather — the paper's CUDA-core stream with Float4
+chunks → 128-lane VMEM rows here, but without the per-element scalar
+loop); the dot reduction runs on the VPU.
+
+Two streamed dimensions keep the working set bounded (k-tiling symmetry
+with SpMM): the feature dimension is tiled (``kf_tile``) with in-VMEM
+accumulation, and Y rows stream in ``(yt, kf_tile)`` panels on a third
+grid dimension — elements whose Y-row lives in another panel are masked
+to zero, so each element is counted exactly once across the panel
+sweep. X feature tiles stay fully resident (rows are scattered across
+windows); streaming X too is a ROADMAP follow-up.
 """
 from __future__ import annotations
 
@@ -16,41 +23,55 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.gather import panel_gather
+
 
 def _kernel(rows_ref, cols_ref, x_ref, y_ref, out_ref):
-    f = pl.program_id(1)  # feature tile
+    f = pl.program_id(1)   # feature tile
+    kk = pl.program_id(2)  # Y row-panel index (fastest)
 
-    xg = jnp.take(x_ref[...], rows_ref[0], axis=0)  # (ts, kft)
-    yg = jnp.take(y_ref[...], cols_ref[0], axis=0)  # (ts, kft)
-    partial = jnp.sum(xg * yg, axis=1)[None, :]     # (1, ts)
+    xg = jnp.take(x_ref[...], rows_ref[0], axis=0)              # (ts, kft)
+    yg, _ = panel_gather(y_ref, cols_ref[0], kk)                # (ts, kft)
+    partial = jnp.sum(xg * yg, axis=1)[None, :]                 # (1, ts)
 
-    @pl.when(f == 0)
+    first = jnp.logical_and(f == 0, kk == 0)
+
+    @pl.when(first)
     def _():
         out_ref[...] = partial
 
-    @pl.when(f != 0)
+    @pl.when(jnp.logical_not(first))
     def _():
         out_ref[...] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("kf_tile", "interpret"))
-def sddmm_vpu(rows, cols, x, y, *, kf_tile: int = 128, interpret: bool = True):
-    """Element scores, shape ``(ntiles, ts)`` (mask applied by the caller)."""
+@functools.partial(
+    jax.jit, static_argnames=("kf_tile", "yt", "interpret"))
+def sddmm_vpu(rows, cols, x, y, *, kf_tile: int = 128,
+              yt: int | None = None, interpret: bool = True):
+    """Element scores, shape ``(ntiles, ts)`` (mask applied by the caller).
+
+    ``yt`` rows of Y are resident per grid step (``None`` = all of Y);
+    ``y.shape[0]`` must be a multiple of ``yt`` (ops.py pads).
+    """
     ntiles, ts = rows.shape
     kf = x.shape[1]
+    kcols = y.shape[0]
+    yt = kcols if yt is None else min(yt, kcols)
     assert kf % kf_tile == 0, (kf, kf_tile)
-    grid = (ntiles, kf // kf_tile)
+    assert kcols % yt == 0, (kcols, yt)
+    grid = (ntiles, kf // kf_tile, kcols // yt)
 
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, ts), lambda i, f: (i, 0)),
-            pl.BlockSpec((1, ts), lambda i, f: (i, 0)),
-            pl.BlockSpec((x.shape[0], kf_tile), lambda i, f: (0, f)),
-            pl.BlockSpec((y.shape[0], kf_tile), lambda i, f: (0, f)),
+            pl.BlockSpec((1, ts), lambda i, f, kk: (i, 0)),
+            pl.BlockSpec((1, ts), lambda i, f, kk: (i, 0)),
+            pl.BlockSpec((x.shape[0], kf_tile), lambda i, f, kk: (0, f)),
+            pl.BlockSpec((yt, kf_tile), lambda i, f, kk: (kk, f)),
         ],
-        out_specs=pl.BlockSpec((1, ts), lambda i, f: (i, 0)),
+        out_specs=pl.BlockSpec((1, ts), lambda i, f, kk: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((ntiles, ts), jnp.float32),
         interpret=interpret,
     )(rows, cols, x, y)

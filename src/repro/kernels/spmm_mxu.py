@@ -13,7 +13,7 @@ TPU adaptation of the paper's TCU stream (§4.4), single-pass edition:
   zero-initialized dense TC output — the redundant-output-traffic term the
   paper drives to zero. The caller scatters the compacted rows into C with
   the plan's ``tc_active_row`` map (fused with the VPU combine).
-* **k-tiled B streaming.** The grid has a third dimension over k-tiles of
+* **k-tiled B streaming.** The grid has a dimension over k-tiles of
   B (``kt`` rows per step) with VMEM accumulator carry on the revisited
   output block, so only a ``(kt, nt)`` panel of B is ever resident —
   large-k matrices (GNN feature dims, MoE dispatch) no longer need a
@@ -28,15 +28,23 @@ TPU adaptation of the paper's TCU stream (§4.4), single-pass edition:
   "store directly when not atomic" case of the hybrid balancer, with no
   aliased C-init operand at all.
 
-Grid-order tradeoff: with shared ranks across blocks, the only order
-whose output revisits are *consecutive* (Pallas' accumulation contract)
-is k-tile-fastest-within-block — which re-fetches each (kt, nt) B panel
-per block instead of keeping it resident while every block consumes it
-(the pre-k-tiling reuse guarantee). In interpret mode this is free; on
-real hardware the fix is double-buffered async B streaming decoupled
-from the grid (see ROADMAP "real TPU hardware" item), not a grid
-reorder, since block-fastest-within-k-tile would revisit output blocks
-non-consecutively.
+Grid order (``grid_order``, tuner-selected — paper §4.2's
+occupancy-aware scheduling choice):
+
+* ``"n_outer"`` (default, always legal): grid ``(n/nt, nb, k/kt)`` —
+  n-tiles outermost, so each TC block's values are re-fetched once per
+  n-tile.
+* ``"block_outer"``: grid ``(nb, n/nt, k/kt)`` — each block's values are
+  fetched exactly once, profitable when ``n/nt > 1``. Only *legal* when
+  every compacted rank owns a single block (``nb == n_active``):
+  with shared ranks the output block for a rank would be revisited
+  non-consecutively across blocks, breaking Pallas' accumulation
+  contract. ``ops.spmm_apply`` downgrades to ``n_outer`` otherwise.
+
+In both orders the k-tile dimension stays fastest (the accumulator carry
+requires consecutive revisits), so on hardware the B panel is re-fetched
+per (block, n-tile) pair until streaming is decoupled from the grid with
+double-buffered async copies (see ROADMAP "real TPU hardware" item).
 """
 from __future__ import annotations
 
@@ -48,19 +56,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import WINDOW
+from repro.kernels.gather import panel_gather
+
+GRID_ORDERS = ("n_outer", "block_outer")
 
 
-def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref):
-    i = pl.program_id(1)   # TC block index
-    kk = pl.program_id(2)  # k-tile index (fastest)
-    kt = b_ref.shape[0]
+def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref, *, block_axis):
+    i = pl.program_id(block_axis)   # TC block index
+    kk = pl.program_id(2)           # k-tile index (fastest)
 
     # --- Batched gather of BK rows from the resident (kt, nt) B panel.
-    cols = cols_ref[0]                       # (bk,) i32, global B-row ids
-    local = cols - kk * kt
-    in_tile = (local >= 0) & (local < kt)
-    gathered = jnp.take(b_ref[...], jnp.clip(local, 0, kt - 1), axis=0)
-    gathered = jnp.where(in_tile[:, None], gathered, 0.0)  # (bk, nt)
+    gathered, _ = panel_gather(b_ref, cols_ref[0], kk)     # (bk, nt)
 
     # --- 8×BK @ BK×NT on the MXU, f32 accumulation.
     acc = jax.lax.dot_general(
@@ -71,7 +77,9 @@ def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref):
     )
 
     # --- First visit of this compacted output block ⇒ store, else add.
-    # (first block of the rank AND first k-tile; ranks are non-decreasing.)
+    # (first block of the rank AND first k-tile; ranks are non-decreasing.
+    # Under block_outer ranks are unique, so the rank test is always true
+    # for i > 0 and `first` reduces to kk == 0 — correct for every (i, j).)
     first = jnp.logical_and(
         kk == 0,
         jnp.logical_or(i == 0,
@@ -88,9 +96,11 @@ def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_active", "nt", "kt", "interpret"))
+    jax.jit,
+    static_argnames=("n_active", "nt", "kt", "grid_order", "interpret"))
 def spmm_mxu(tc_vals, tc_cols, tc_rank, b, *, n_active: int, nt: int = 128,
-             kt: int | None = None, interpret: bool = True):
+             kt: int | None = None, grid_order: str = "n_outer",
+             interpret: bool = True):
     """Compacted TC-path partial output, shape ``(n_active * 8, n)``.
 
     Args:
@@ -101,26 +111,44 @@ def spmm_mxu(tc_vals, tc_cols, tc_rank, b, *, n_active: int, nt: int = 128,
          multiple of ``kt`` (ops.py pads both).
       n_active: number of distinct ranks (compacted output height / 8).
       kt: B k-tile rows per grid step (defaults to all of k resident).
+      grid_order: "n_outer" (always legal) or "block_outer" (requires
+        one block per rank, i.e. ``nb == n_active`` — caller enforces).
     """
     nb, _, bk = tc_vals.shape
     k, n = b.shape
     kt = k if kt is None else kt
     assert n % nt == 0, (n, nt)
     assert k % kt == 0, (k, kt)
-    grid = (n // nt, nb, k // kt)
+    assert grid_order in GRID_ORDERS, grid_order
+
+    if grid_order == "n_outer":
+        grid = (n // nt, nb, k // kt)
+        block_axis = 1
+        vals_map = lambda j, i, kk, r: (i, 0, 0)    # noqa: E731
+        cols_map = lambda j, i, kk, r: (i, 0)       # noqa: E731
+        b_map = lambda j, i, kk, r: (kk, j)         # noqa: E731
+        out_map = lambda j, i, kk, r: (r[i], 0, j)  # noqa: E731
+    else:
+        assert nb == n_active, (
+            "block_outer requires one block per rank", nb, n_active)
+        grid = (nb, n // nt, k // kt)
+        block_axis = 0
+        vals_map = lambda i, j, kk, r: (i, 0, 0)    # noqa: E731
+        cols_map = lambda i, j, kk, r: (i, 0)       # noqa: E731
+        b_map = lambda i, j, kk, r: (kk, j)         # noqa: E731
+        out_map = lambda i, j, kk, r: (r[i], 0, j)  # noqa: E731
 
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, block_axis=block_axis),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, WINDOW, bk), lambda j, i, kk, r: (i, 0, 0)),
-                pl.BlockSpec((1, bk), lambda j, i, kk, r: (i, 0)),
-                pl.BlockSpec((kt, nt), lambda j, i, kk, r: (kk, j)),
+                pl.BlockSpec((1, WINDOW, bk), vals_map),
+                pl.BlockSpec((1, bk), cols_map),
+                pl.BlockSpec((kt, nt), b_map),
             ],
-            out_specs=pl.BlockSpec(
-                (1, WINDOW, nt), lambda j, i, kk, r: (r[i], 0, j)),
+            out_specs=pl.BlockSpec((1, WINDOW, nt), out_map),
         ),
         out_shape=jax.ShapeDtypeStruct((n_active, WINDOW, n), jnp.float32),
         interpret=interpret,

@@ -20,6 +20,13 @@ Tiles write *partials*; the single fused scatter-accumulate in ops.py
 plays the role of atomicAdd (tiles are row-sorted by preprocessing, and on
 TPU the one deterministic scatter replaces the paper's short/long-tile
 store-vs-atomic split of §4.3 bitwise-reproducibly).
+
+``grid_order`` (tuner-selected) permutes the two outer grid dimensions:
+``"n_outer"`` walks all tiles per n-tile (tile vals re-fetched per
+n-tile), ``"block_outer"`` walks all n-tiles per tile (tile vals fetched
+once). Unlike the MXU kernel, both orders are always legal here — every
+tile owns its output row exclusively, so the only revisited dimension is
+the (innermost) k-tile sweep either way.
 """
 from __future__ import annotations
 
@@ -29,17 +36,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.gather import panel_gather
+
+GRID_ORDERS = ("n_outer", "block_outer")
+
 
 def _kernel(vals_ref, cols_ref, b_ref, out_ref):
     kk = pl.program_id(2)  # k-tile index (fastest)
-    kt = b_ref.shape[0]
 
-    cols = cols_ref[0]                       # (ts,) i32, global B-row ids
-    local = cols - kk * kt
-    in_tile = (local >= 0) & (local < kt)
-    gathered = jnp.take(b_ref[...], jnp.clip(local, 0, kt - 1), axis=0)
-    w = jnp.where(in_tile, vals_ref[0], 0.0)  # (ts,)
-    partial = jnp.sum(w[:, None] * gathered, axis=0, keepdims=True)  # (1, nt)
+    # Out-of-tile B rows come back zeroed, so raw tile values multiply
+    # to zero contribution — each non-zero counted once across the sweep.
+    gathered, _ = panel_gather(b_ref, cols_ref[0], kk)     # (ts, nt)
+    partial = jnp.sum(vals_ref[0][:, None] * gathered, axis=0,
+                      keepdims=True)                       # (1, nt)
 
     @pl.when(kk == 0)
     def _():
@@ -50,9 +59,10 @@ def _kernel(vals_ref, cols_ref, b_ref, out_ref):
         out_ref[...] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("nt", "kt", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("nt", "kt", "grid_order", "interpret"))
 def spmm_vpu(vpu_vals, vpu_cols, b, *, nt: int = 128, kt: int | None = None,
-             interpret: bool = True):
+             grid_order: str = "n_outer", interpret: bool = True):
     """Per-tile partial rows, shape ``(ntiles, n)`` (combined by the fused
     scatter-accumulate in ops.py).
 
@@ -61,23 +71,35 @@ def spmm_vpu(vpu_vals, vpu_cols, b, *, nt: int = 128, kt: int | None = None,
       vpu_cols: (ntiles, ts) i32 column of each value (0 where padded).
       b: (k, n) dense matrix; n multiple of ``nt``, k multiple of ``kt``.
       kt: B k-tile rows per grid step (defaults to all of k resident).
+      grid_order: "n_outer" or "block_outer" (see module docstring).
     """
     ntiles, ts = vpu_vals.shape
     k, n = b.shape
     kt = k if kt is None else kt
     assert n % nt == 0, (n, nt)
     assert k % kt == 0, (k, kt)
-    grid = (n // nt, ntiles, k // kt)
+    assert grid_order in GRID_ORDERS, grid_order
+
+    if grid_order == "n_outer":
+        grid = (n // nt, ntiles, k // kt)
+        tile_map = lambda j, i, kk: (i, 0)   # noqa: E731
+        b_map = lambda j, i, kk: (kk, j)     # noqa: E731
+        out_map = lambda j, i, kk: (i, j)    # noqa: E731
+    else:
+        grid = (ntiles, n // nt, k // kt)
+        tile_map = lambda i, j, kk: (i, 0)   # noqa: E731
+        b_map = lambda i, j, kk: (kk, j)     # noqa: E731
+        out_map = lambda i, j, kk: (i, j)    # noqa: E731
 
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, ts), lambda j, i, kk: (i, 0)),
-            pl.BlockSpec((1, ts), lambda j, i, kk: (i, 0)),
-            pl.BlockSpec((kt, nt), lambda j, i, kk: (kk, j)),
+            pl.BlockSpec((1, ts), tile_map),
+            pl.BlockSpec((1, ts), tile_map),
+            pl.BlockSpec((kt, nt), b_map),
         ],
-        out_specs=pl.BlockSpec((1, nt), lambda j, i, kk: (i, j)),
+        out_specs=pl.BlockSpec((1, nt), out_map),
         out_shape=jax.ShapeDtypeStruct((ntiles, n), jnp.float32),
         interpret=interpret,
     )(vpu_vals, vpu_cols, b)

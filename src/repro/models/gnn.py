@@ -33,13 +33,22 @@ def transpose_csr(a: SparseCSR) -> tuple[SparseCSR, np.ndarray]:
 
 
 class GraphOps:
-    """Preprocessed Libra plans for one graph: A, A^T, and SDDMM(A)."""
+    """Preprocessed Libra plans for one graph: A, A^T, and SDDMM(A).
+
+    ``tune`` threads the plan-selection subsystem (:mod:`repro.tune`)
+    through the training path: ``"model"`` picks per-graph thresholds
+    and tile sizes analytically (A and Aᵀ each get their own config —
+    their sparsity patterns differ), ``"off"`` (default) keeps the
+    module defaults.
+    """
 
     def __init__(self, a: SparseCSR, mode: str = "hybrid",
                  spmm_threshold: int | None = None,
-                 sddmm_threshold: int | None = None):
+                 sddmm_threshold: int | None = None,
+                 tune: str = "off"):
         from repro.core.sddmm import threshold_for_mode as sddmm_thr
         from repro.core.spmm import threshold_for_mode as spmm_thr
+        from repro.tune import matrix_features, tune_sddmm, tune_spmm
 
         self.a = a
         self.m, self.k = a.shape
@@ -47,11 +56,24 @@ class GraphOps:
         self.nwin = num_windows(a.m)
         at, self.perm = transpose_csr(a)
         self.nwin_t = num_windows(at.m)
-        t_sp = spmm_thr(mode, spmm_threshold)
-        t_sd = sddmm_thr(mode, preprocess.DEFAULT_BK_SDDMM, sddmm_threshold)
-        self.arrs = device_arrays(preprocess.preprocess_spmm(a, t_sp))
-        self.arrs_t = device_arrays(preprocess.preprocess_spmm(at, t_sp))
-        self.arrs_sd = device_arrays(preprocess.preprocess_sddmm(a, t_sd))
+        # One feature pass per matrix, shared by the SpMM and SDDMM tuners.
+        feat_a = matrix_features(a) if tune == "model" else None
+        self.cfg = tune_spmm(a, mode=mode, threshold=spmm_threshold,
+                             tune=tune, feat=feat_a)
+        self.cfg_t = tune_spmm(at, mode=mode, threshold=spmm_threshold,
+                               tune=tune)
+        self.cfg_sd = tune_sddmm(a, mode=mode, threshold=sddmm_threshold,
+                                 tune=tune, feat=feat_a)
+        t_sp = spmm_thr(mode, self.cfg.threshold)
+        t_sp_t = spmm_thr(mode, self.cfg_t.threshold)
+        t_sd = sddmm_thr(mode, preprocess.DEFAULT_BK_SDDMM,
+                         self.cfg_sd.threshold)
+        self.arrs = device_arrays(
+            preprocess.preprocess_spmm(a, t_sp, cfg=self.cfg))
+        self.arrs_t = device_arrays(
+            preprocess.preprocess_spmm(at, t_sp_t, cfg=self.cfg_t))
+        self.arrs_sd = device_arrays(
+            preprocess.preprocess_sddmm(a, t_sd, cfg=self.cfg_sd))
         self.perm_dev = jnp.asarray(self.perm)
         # Row id per edge (for softmax over incident edges).
         rows, _, _ = a.to_coo()
@@ -70,7 +92,7 @@ class GraphOps:
     def fixed_spmm(self, b, backend: str = "xla"):
         """C = A @ B with the plan's baked-in values (no grad wrt values)."""
         return spmm_apply(self.arrs, b, m=self.m, nwin=self.nwin,
-                          backend=backend)
+                          backend=backend, cfg=self.cfg)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))

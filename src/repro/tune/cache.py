@@ -1,0 +1,110 @@
+"""Persistent plan cache: tune once per sparsity pattern, ever.
+
+Serving and repeated benchmarks construct the same operators over and
+over; empirical search in particular is too expensive to redo per
+process. Tuned :class:`~repro.tune.model.TuneConfig` objects are stored
+as one JSON file per key under a configurable directory:
+
+* default root: ``$REPRO_TUNE_CACHE_DIR`` if set, else
+  ``~/.cache/repro_tune``;
+* key = BLAKE2b hash of the matrix's *sparsity signature* (shape, nnz,
+  ``indptr``/``indices`` bytes — values don't change plan selection)
+  plus the tuning context (operator kind, dense width, dtype, backend,
+  mode, any explicit threshold override, tuner version);
+* writes are atomic (``os.replace`` of a temp file) so concurrent
+  processes never observe a torn entry; unreadable/corrupt entries are
+  treated as misses.
+
+Bumping :data:`CACHE_VERSION` invalidates every entry (the version is
+hashed into the key), which is how model/search changes roll out without
+a manual cache wipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+
+from repro.sparse.matrix import SparseCSR
+from repro.tune.model import TuneConfig
+
+CACHE_VERSION = 1
+_ENV_VAR = "REPRO_TUNE_CACHE_DIR"
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro_tune")
+
+
+def matrix_signature(a: SparseCSR) -> str:
+    """Hash of the sparsity *pattern* (not the values): plan selection —
+    threshold split, tiling, grid order — depends only on the pattern."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"{a.m}:{a.k}:{a.nnz}:".encode())
+    h.update(a.indptr.astype("int64").tobytes())
+    h.update(a.indices.astype("int32").tobytes())
+    return h.hexdigest()
+
+
+def tune_key(a: SparseCSR, *, op: str, width: int, dtype: str,
+             backend: str, mode: str, tune: str,
+             threshold: int | None = None, bk: int | None = None,
+             ts_tile: int | None = None) -> str:
+    """Full cache key: sparsity signature + tuning context (including any
+    explicit plan-parameter overrides — a result searched for one ``bk``
+    must not be served for another)."""
+    h = hashlib.blake2b(digest_size=16)
+    payload = (f"v{CACHE_VERSION}|{matrix_signature(a)}|{op}|{width}|"
+               f"{dtype}|{backend}|{mode}|{tune}|{threshold}|{bk}|{ts_tile}")
+    h.update(payload.encode())
+    return h.hexdigest()
+
+
+class PlanCache:
+    """File-per-key JSON store for tuned configs."""
+
+    def __init__(self, root: str | None = None):
+        self.root = root or default_cache_dir()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.json")
+
+    def get(self, key: str) -> TuneConfig | None:
+        try:
+            with open(self._path(key)) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if doc.get("version") != CACHE_VERSION:
+            return None
+        cfg = doc.get("config")
+        try:
+            return TuneConfig(**cfg).replace(source="cache")
+        except TypeError:
+            return None  # field drift ⇒ treat as miss
+
+    def put(self, key: str, cfg: TuneConfig, meta: dict | None = None) -> str:
+        os.makedirs(self.root, exist_ok=True)
+        doc = {
+            "version": CACHE_VERSION,
+            "config": dataclasses.asdict(cfg),
+            "meta": meta or {},
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1)
+                f.write("\n")
+            os.replace(tmp, self._path(key))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return self._path(key)

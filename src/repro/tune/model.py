@@ -1,0 +1,364 @@
+"""Occupancy-aware analytical tuner (paper §4.2 + §4.4 choices, modeled).
+
+The paper's gains come from *choosing well* per sparsity pattern: the
+2D-aware workload distribution picks the TC/VPU split, and
+occupancy-aware task scheduling sizes work to the hardware. This module
+makes those choices analytically — no timing — from cheap matrix
+features:
+
+* a **vector histogram** (per window, how many 8×1 column vectors have
+  1..8 non-zeros — the Fig.-1 statistic at full resolution), which
+  prices every candidate threshold through the same roofline formulas as
+  :mod:`repro.core.threshold` *without building a plan per candidate*;
+* a **VMEM footprint model** for each of the four kernels: the bytes a
+  single pipelined grid step keeps resident (Pallas double-buffers the
+  streamed input blocks, hence the ×2 on inputs). Tile sizes (``kt``,
+  ``nt``, ``kf_tile``, ``yt``) are chosen as the largest
+  hardware-aligned candidates whose footprint stays inside
+  ``VMEM_BUDGET_BYTES`` — the TPU analogue of CUDA occupancy sizing;
+* a **grid-order pick** (``n_outer`` vs ``block_outer``) from the block
+  layout: ``block_outer`` fetches each condensed TC block once instead
+  of once per n-tile, but is only *legal* when every active window owns
+  a single block (otherwise output revisits stop being consecutive —
+  see :mod:`repro.kernels.spmm_mxu`).
+
+The result is a :class:`TuneConfig` — the single object every layer
+(preprocess, ops, kernels, benchmarks) parameterizes through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+from repro.core.formats import WINDOW
+from repro.core.threshold import HardwareModel
+from repro.sparse.matrix import SparseCSR
+
+# Per-core VMEM on current TPUs is ~16 MiB; leave headroom for Mosaic's
+# own scratch + the scalar-prefetch operands.
+VMEM_BYTES_TOTAL = 16 * 2**20
+VMEM_BUDGET_BYTES = int(VMEM_BYTES_TOTAL * 0.75)
+
+# Hardware-aligned tile candidates (lane width 128, sublane multiple 8).
+_KT_CANDIDATES = (8192, 4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8)
+_NT_CANDIDATES = (512, 256, 128)
+_KF_CANDIDATES = (512, 256, 128)
+_YT_CANDIDATES = (8192, 4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """One plan-selection decision, consumed by every layer.
+
+    ``threshold``/``bk``/``ts_tile`` parameterize preprocessing (the
+    2D-aware distribution); ``kt``/``nt``/``grid_order`` the SpMM
+    kernels; ``kf_tile``/``yt`` the SDDMM kernels. ``None`` means "the
+    operator default" so a bare ``TuneConfig()`` reproduces the
+    untuned behavior. Frozen + hashable so it can ride through
+    ``jax.jit`` as a static argument.
+    """
+
+    kt: int = 512            # SpMM B k-tile rows resident per grid step
+    nt: int = 128            # SpMM lane tile (output columns per step)
+    kf_tile: int = 128       # SDDMM feature tile
+    yt: int | None = None    # SDDMM Y-row panel (None = all rows resident)
+    threshold: int | None = None  # TC/VPU split (None = operator default)
+    bk: int | None = None    # condensed block depth (None = operator default)
+    ts_tile: int | None = None    # VPU tile width (None = operator default)
+    grid_order: str = "n_outer"   # SpMM grid order (see kernel docstrings)
+    source: str = "default"  # default | model | search | cache
+
+    def replace(self, **kw) -> "TuneConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULT_TUNE = TuneConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixFeatures:
+    """Cheap pattern statistics driving the analytical tuner."""
+
+    m: int
+    k: int
+    nnz: int
+    nwin: int
+    row_hist: np.ndarray   # (m,) nnz per row
+    win_vec_hist: np.ndarray  # (nwin, WINDOW+1) vectors per window by count
+    # win_vec_hist[w, c] = number of 8×1 column vectors in window w with
+    # exactly c non-zeros (c in 1..WINDOW; column 0 unused).
+
+    @property
+    def window_density(self) -> float:
+        """Mean fraction of occupied sublanes over non-empty vectors."""
+        counts = np.arange(WINDOW + 1)
+        tot_vec = self.win_vec_hist.sum()
+        if tot_vec == 0:
+            return 0.0
+        occ = (self.win_vec_hist * counts[None, :]).sum()
+        return float(occ / (tot_vec * WINDOW))
+
+    def vectors_at_least(self, threshold: int) -> np.ndarray:
+        """Per-window count of vectors with ≥ ``threshold`` non-zeros."""
+        t = int(np.clip(threshold, 1, WINDOW + 1))
+        return self.win_vec_hist[:, t:].sum(axis=1)
+
+    def nnz_at_least(self, threshold: int) -> int:
+        """Total non-zeros living in vectors with ≥ ``threshold`` nnz."""
+        t = int(np.clip(threshold, 1, WINDOW + 1))
+        counts = np.arange(WINDOW + 1)
+        return int((self.win_vec_hist[:, t:] * counts[None, t:]).sum())
+
+
+def matrix_features(a: SparseCSR) -> MatrixFeatures:
+    """One vectorized pass: row histogram + per-window vector histogram."""
+    rows, cols, _ = a.to_coo()
+    nwin = (a.m + WINDOW - 1) // WINDOW
+    row_hist = np.diff(a.indptr).astype(np.int64)
+    win_vec_hist = np.zeros((max(nwin, 1), WINDOW + 1), np.int64)
+    if rows.size:
+        win = (rows // WINDOW).astype(np.int64)
+        order = np.lexsort((cols, win))
+        winS, colS = win[order], cols[order]
+        newvec = np.ones(winS.size, bool)
+        newvec[1:] = (winS[1:] != winS[:-1]) | (colS[1:] != colS[:-1])
+        vec_id = np.cumsum(newvec) - 1
+        vec_count = np.bincount(vec_id)
+        vec_win = winS[newvec]
+        np.add.at(win_vec_hist, (vec_win, vec_count), 1)
+    return MatrixFeatures(a.m, a.k, a.nnz, nwin, row_hist, win_vec_hist)
+
+
+# --------------------------------------------------------------- VMEM ---
+def _itemsize(dtype) -> int:
+    return int(np.dtype(dtype).itemsize)
+
+
+def vmem_spmm_bytes(cfg: TuneConfig, *, bk: int, ts: int,
+                    dtype=np.float32) -> int:
+    """Resident bytes of one pipelined grid step, max over the two
+    SpMM kernels (the streams are scheduled independently).
+
+    Streamed input blocks are double-buffered (×2); the revisited output
+    block is single-buffered (it is the accumulator carry).
+    """
+    it = _itemsize(dtype)
+    kt, nt = cfg.kt, cfg.nt
+    # MXU step: TC block vals (8, bk) + cols (bk,) + B panel (kt, nt),
+    # output (8, nt) accumulator.
+    mxu = 2 * (WINDOW * bk * it + bk * 4 + kt * nt * it) + WINDOW * nt * it
+    # VPU step: tile vals/cols (ts,) each + B panel (kt, nt), output (nt,).
+    vpu = 2 * (2 * ts * 4 + kt * nt * it) + nt * it
+    return max(mxu, vpu)
+
+
+def vmem_sddmm_bytes(cfg: TuneConfig, *, bk: int, ts: int, m_rows: int,
+                     kcols: int, dtype=np.float32) -> int:
+    """Resident bytes of one pipelined SDDMM grid step (max over kernels).
+
+    Both SDDMM kernels stream Y in ``(yt, kf_tile)`` row panels (the
+    k-tiling-symmetry satellite), so huge ``kcols`` masks stay bounded.
+    The VPU kernel still keeps the full X *feature tile* resident —
+    that residual ``m_rows`` term is why the tuner shrinks ``kf_tile``
+    on tall operands (streaming X too is a ROADMAP follow-up).
+    """
+    it = _itemsize(dtype)
+    kf = cfg.kf_tile
+    yt = kcols if cfg.yt is None else min(cfg.yt, kcols)
+    mxu = 2 * (WINDOW * kf * it + yt * kf * it + 2 * bk * 4) \
+        + WINDOW * bk * it
+    vpu = 2 * (m_rows * kf * it + yt * kf * it + 2 * ts * 4) + ts * it
+    return max(mxu, vpu)
+
+
+def occupancy_report(step_bytes: int,
+                     budget: int = VMEM_BUDGET_BYTES) -> dict:
+    """Pipeline-depth view of a footprint: how many grid steps' working
+    sets fit in VMEM at once (≥ 2 ⇒ compute/DMA overlap is possible)."""
+    return {
+        "bytes_per_step": int(step_bytes),
+        "budget_bytes": int(budget),
+        "pipeline_depth": int(budget // max(step_bytes, 1)),
+        "fits": bool(step_bytes <= budget),
+    }
+
+
+# ---------------------------------------------------- threshold model ---
+def _modeled_spmm_time(feat: MatrixFeatures, threshold: int, *, n: int,
+                       bk: int, hw: HardwareModel) -> float:
+    """Roofline time of the hybrid split at ``threshold`` — same formulas
+    as :func:`repro.core.threshold.model_spmm_time` but priced directly
+    off the vector histogram (no plan construction per candidate)."""
+    vec_ge = feat.vectors_at_least(threshold)
+    nblk = int(np.ceil(vec_ge / bk).sum())
+    tc_nnz = feat.nnz_at_least(threshold)
+    vpu_nnz = feat.nnz - tc_nnz
+    flops_mxu = 2.0 * nblk * WINDOW * bk * n
+    bytes_mxu = 4.0 * nblk * bk * n + 4.0 * nblk * WINDOW * bk
+    t_mxu = max(flops_mxu / (hw.mxu_tflops * 1e12),
+                bytes_mxu / (hw.hbm_gbps * 1e9))
+    flops_vpu = 2.0 * vpu_nnz * n
+    bytes_vpu = 4.0 * vpu_nnz * n
+    t_vpu = max(flops_vpu / (hw.vpu_tflops * 1e12),
+                bytes_vpu / (hw.hbm_gbps * 1e9))
+    return max(t_mxu, t_vpu) + 1e-12
+
+
+def _modeled_sddmm_time(feat: MatrixFeatures, threshold: int, *, kf: int,
+                        bk: int, hw: HardwareModel) -> float:
+    """Roofline time of the SDDMM block split at ``threshold`` nnz/block.
+
+    SDDMM distributes at 8×bk-block granularity (densest-first packing):
+    approximate each window's candidate blocks by packing its vectors
+    densest-first and keeping blocks with ≥ threshold nnz on the MXU.
+    """
+    hist = feat.win_vec_hist
+    counts = np.arange(WINDOW + 1)
+    nvec_w = hist.sum(axis=1)
+    nnz_w = (hist * counts[None, :]).sum(axis=1)
+    nblk_w = np.ceil(nvec_w / bk)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        mean_blk_nnz = np.where(nblk_w > 0, nnz_w / np.maximum(nblk_w, 1), 0)
+    tc_mask = mean_blk_nnz >= threshold
+    nblk = int(nblk_w[tc_mask].sum())
+    tc_nnz = int(nnz_w[tc_mask].sum())
+    vpu_nnz = feat.nnz - tc_nnz
+    flops_mxu = 2.0 * nblk * WINDOW * bk * kf
+    bytes_mxu = 4.0 * nblk * (WINDOW + bk) * kf
+    t_mxu = max(flops_mxu / (hw.mxu_tflops * 1e12),
+                bytes_mxu / (hw.hbm_gbps * 1e9))
+    flops_vpu = 2.0 * vpu_nnz * kf
+    bytes_vpu = 8.0 * vpu_nnz * kf
+    t_vpu = max(flops_vpu / (hw.vpu_tflops * 1e12),
+                bytes_vpu / (hw.hbm_gbps * 1e9))
+    return max(t_mxu, t_vpu) + 1e-12
+
+
+# ------------------------------------------------------------ tuners ---
+def _pick_tiles(fits, primary, secondary):
+    """Largest (primary, secondary) pair that fits, preferring a bigger
+    primary tile (more reuse per panel fetch) over a bigger secondary."""
+    for p in primary:
+        for s in secondary:
+            if fits(p, s):
+                return p, s
+    return primary[-1], secondary[-1]
+
+
+def _pick_ts_tile(feat: MatrixFeatures) -> int:
+    """Residual-tile width from the nnz/row histogram: rows shorter than
+    the tile waste padded lanes, so size the tile to the p95 row length
+    (residual rows are never longer than their source row)."""
+    if not feat.row_hist.size:
+        return 32
+    p95 = float(np.percentile(feat.row_hist, 95))
+    return 8 if p95 <= 8 else 16 if p95 <= 16 else 32
+
+
+def model_tune_spmm(a: SparseCSR, *, n: int = 128, dtype=np.float32,
+                    bk: int | None = None, ts_tile: int | None = None,
+                    mode: str = "hybrid",
+                    threshold: int | None = None,
+                    hw: HardwareModel = HardwareModel(),
+                    budget: int = VMEM_BUDGET_BYTES,
+                    feat: MatrixFeatures | None = None) -> TuneConfig:
+    """Emit a full SpMM :class:`TuneConfig` from matrix features.
+
+    Explicit ``threshold`` (or a forcing ``mode``) is respected — the
+    model then only sizes tiles and picks the grid order. Explicit
+    ``bk``/``ts_tile`` are likewise kept (and priced), so the emitted
+    config always describes the plan that will actually be built.
+    """
+    from repro.core import preprocess as P
+
+    bk = P.DEFAULT_BK_SPMM if bk is None else bk
+    feat = feat or matrix_features(a)
+    ts_tile = _pick_ts_tile(feat) if ts_tile is None else ts_tile
+
+    if threshold is None and mode == "hybrid":
+        cand = range(1, WINDOW + 2)
+        times = {t: _modeled_spmm_time(feat, t, n=n, bk=bk, hw=hw)
+                 for t in cand}
+        threshold = min(times, key=lambda t: (times[t], t))
+
+    # Tile sizing: largest (kt, nt) whose pipelined step fits the budget.
+    # kt beyond k buys nothing (ops clamps); nt beyond n likewise.
+    kts = [c for c in _KT_CANDIDATES if c <= max(a.k, _KT_CANDIDATES[-1])]
+    nts = [c for c in _NT_CANDIDATES if c <= max(n, _NT_CANDIDATES[-1])]
+
+    def fits(kt, nt):
+        cfg = TuneConfig(kt=kt, nt=nt)
+        return vmem_spmm_bytes(cfg, bk=bk, ts=ts_tile, dtype=dtype) <= budget
+
+    kt, nt = _pick_tiles(fits, kts, nts)
+
+    # Grid order: block_outer fetches each TC block's values once instead
+    # of once per n-tile, but requires one block per active window (the
+    # consecutive-output-revisit contract). That holds iff no window has
+    # more than bk vectors above the threshold.
+    max_vec = int(feat.vectors_at_least(threshold or 1).max()) \
+        if feat.win_vec_hist.size else 0
+    multi_ntile = n > nt
+    grid_order = ("block_outer"
+                  if multi_ntile and 0 < max_vec <= bk else "n_outer")
+
+    cfg = TuneConfig(kt=kt, nt=nt, threshold=threshold, bk=bk,
+                     ts_tile=ts_tile, grid_order=grid_order,
+                     source="model")
+    step = vmem_spmm_bytes(cfg, bk=bk, ts=ts_tile, dtype=dtype)
+    if step > budget:  # smallest candidates still don't fit
+        warnings.warn(
+            f"model_tune_spmm: smallest tile candidates need {step} B "
+            f"per grid step, over the {budget} B VMEM budget",
+            RuntimeWarning, stacklevel=2)
+    return cfg
+
+
+def model_tune_sddmm(a: SparseCSR, *, kf: int = 128, dtype=np.float32,
+                     bk: int | None = None, ts_tile: int | None = None,
+                     mode: str = "hybrid",
+                     threshold: int | None = None,
+                     hw: HardwareModel = HardwareModel(),
+                     budget: int = VMEM_BUDGET_BYTES,
+                     feat: MatrixFeatures | None = None) -> TuneConfig:
+    """Emit a full SDDMM :class:`TuneConfig` from matrix features.
+
+    Warns (RuntimeWarning) when even the smallest tile candidates exceed
+    the budget — possible for very tall X, whose feature tile stays
+    fully resident in the VPU kernel (the documented residual term).
+    """
+    from repro.core import preprocess as P
+
+    bk = P.DEFAULT_BK_SDDMM if bk is None else bk
+    feat = feat or matrix_features(a)
+    ts_tile = 32 if ts_tile is None else ts_tile
+
+    if threshold is None and mode == "hybrid":
+        cand = (1, 8, 16, 24, 32, 48, 64, WINDOW * bk + 1)
+        times = {t: _modeled_sddmm_time(feat, t, kf=kf, bk=bk, hw=hw)
+                 for t in cand}
+        threshold = min(times, key=lambda t: (times[t], t))
+
+    kfs = [c for c in _KF_CANDIDATES if c <= max(kf, _KF_CANDIDATES[-1])]
+    yts = [c for c in _YT_CANDIDATES if c <= max(a.k, _YT_CANDIDATES[-1])]
+
+    def fits(yt, kft):
+        cfg = TuneConfig(kf_tile=kft, yt=yt)
+        return vmem_sddmm_bytes(cfg, bk=bk, ts=ts_tile, m_rows=a.m,
+                                kcols=a.k, dtype=dtype) <= budget
+
+    yt, kf_tile = _pick_tiles(fits, yts, kfs)
+
+    cfg = TuneConfig(kf_tile=kf_tile, yt=yt, threshold=threshold, bk=bk,
+                     ts_tile=ts_tile, source="model")
+    step = vmem_sddmm_bytes(cfg, bk=bk, ts=ts_tile, m_rows=a.m, kcols=a.k,
+                            dtype=dtype)
+    if step > budget:
+        warnings.warn(
+            f"model_tune_sddmm: smallest tile candidates need {step} B "
+            f"per grid step, over the {budget} B VMEM budget (X feature "
+            f"tiles stay resident for m={a.m} rows — see ROADMAP)",
+            RuntimeWarning, stacklevel=2)
+    return cfg
