@@ -1,1 +1,37 @@
-"""Distributed-execution utilities (mesh axis rules, GSPMD shardings)."""
+"""Distributed execution: GSPMD sharding rules for the dense models
+(:mod:`repro.dist.sharding`) and the window-sharded + batched hybrid
+sparse subsystem (:mod:`repro.dist.partition` / :mod:`repro.dist.sparse`
+/ :mod:`repro.dist.gnn`).
+
+Lazy exports (PEP 562) so ``import repro.dist`` stays cheap and the
+sparse subsystem can be used without pulling in the dense-model stack.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "BatchedSDDMM": "repro.dist.sparse",
+    "BatchedSpMM": "repro.dist.sparse",
+    "DistGraphOps": "repro.dist.gnn",
+    "SDDMMPartition": "repro.dist.partition",
+    "SHARD_AXIS": "repro.dist.sparse",
+    "Shard": "repro.dist.partition",
+    "SpMMPartition": "repro.dist.partition",
+    "column_halo": "repro.dist.partition",
+    "make_agnn_train_step": "repro.dist.gnn",
+    "make_gcn_train_step": "repro.dist.gnn",
+    "partition_sddmm": "repro.dist.partition",
+    "partition_spmm": "repro.dist.partition",
+    "sddmm_sharded": "repro.dist.sparse",
+    "shard_windows": "repro.dist.partition",
+    "spmm_sharded": "repro.dist.sparse",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

@@ -1,0 +1,363 @@
+"""Window-sharded partitioning of Libra plans (the distribution layer).
+
+A :class:`~repro.sparse.matrix.SparseCSR` is split into ``P`` shards of
+*contiguous 8-row windows* (the paper's SGT granularity — a window never
+straddles shards, so every TC block and VPU tile lives wholly on one
+device). Shard boundaries are chosen on the cumulative nnz curve, the
+contiguous analogue of the hybrid balancer's segment decomposition:
+per-shard nnz is within one window of the ideal ``nnz/P`` split
+(:func:`repro.core.balance.balance_report` quantifies the residue in
+``meta``).
+
+Each shard is then a self-contained Libra problem:
+
+* **column-halo compaction** — the shard's column indices are remapped
+  onto the sorted-unique set of B/Y rows they touch (``Shard.halo``).
+  The remap is monotone, so the shard's canonical CSR nnz order is
+  exactly the global order restricted to its row range — value vectors
+  slice, they never permute.
+* **per-shard autotuning** — ``repro.tune`` runs on every shard's own
+  pattern, so a dense-window shard and a hyper-sparse shard of the same
+  matrix get different TC/VPU thresholds and tile sizes. Preprocessing
+  consumes the per-shard config; the kernel-tile fields are combined
+  conservatively (min across shards) into one ``run_cfg``, because a
+  ``shard_map`` body is a single program.
+* **padded stacking** — per-shard device arrays are padded to common
+  shapes and stacked on a leading shard axis so ``shard_map`` can split
+  them over a mesh axis. Padding is *semantically inert by
+  construction*: dummy TC blocks carry zero values and cover exactly
+  the compacted output ranks a shard is missing (so the Pallas kernel
+  writes every output block), dummy VPU tiles scatter zeros onto local
+  row 0, dummy SDDMM entries carry bitmap 0 / mask False and scatter
+  into the swallow slot.
+
+``out_gather`` / ``nnz_gather`` invert the padding: one global ``take``
+reassembles the row-partitioned C (or the canonical nnz value vector)
+from the stacked per-device outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import preprocess
+from repro.core.balance import balance_report
+from repro.core.formats import WINDOW
+from repro.core.sddmm import threshold_for_mode as sddmm_threshold_for_mode
+from repro.core.spmm import threshold_for_mode as spmm_threshold_for_mode
+from repro.core.windows import num_windows
+from repro.sparse.matrix import SparseCSR
+from repro.tune import TuneConfig, tune_sddmm, tune_spmm
+
+
+# ------------------------------------------------------- window split ---
+def shard_windows(a: SparseCSR, n_shards: int) -> np.ndarray:
+    """Contiguous window ranges balanced by nnz.
+
+    Returns ``bounds`` of shape ``(n_shards + 1,)``: shard ``i`` owns
+    windows ``[bounds[i], bounds[i+1])``. Boundaries sit where the
+    cumulative nnz curve crosses ``i · nnz/P``, so every shard's nnz is
+    within one window's nnz of the ideal split (shards may be empty when
+    ``P > nwin``).
+    """
+    nwin = num_windows(a.m)
+    row_ends = np.minimum((np.arange(nwin) + 1) * WINDOW, a.m)
+    cum = a.indptr[row_ends].astype(np.float64)  # nnz through window w
+    targets = a.nnz * (np.arange(1, n_shards) / n_shards)
+    inner = np.searchsorted(cum, targets, side="left") + 1
+    bounds = np.concatenate([[0], np.minimum(inner, nwin), [nwin]])
+    return np.maximum.accumulate(bounds).astype(np.int64)
+
+
+def column_halo(a: SparseCSR, r0: int, r1: int
+                ) -> tuple[np.ndarray, SparseCSR]:
+    """Halo map + halo-remapped sub-CSR for global rows ``[r0, r1)``.
+
+    The halo is the sorted-unique set of global B/Y-row ids the row
+    range's column indices touch; the returned CSR has shape
+    ``(r1 - r0, len(halo))`` with columns remapped onto halo positions.
+    The remap is monotone (sorted halo), so canonical nnz order is
+    preserved.
+    """
+    lo, hi = int(a.indptr[r0]), int(a.indptr[r1])
+    cols = a.indices[lo:hi]
+    halo = np.unique(cols).astype(np.int32)
+    local_cols = np.searchsorted(halo, cols).astype(np.int32)
+    indptr = (a.indptr[r0:r1 + 1] - lo).astype(np.int64)
+    sub = SparseCSR(r1 - r0, max(int(halo.size), 1), indptr, local_cols,
+                    a.data[lo:hi].astype(np.float32))
+    return halo, sub
+
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    """One contiguous-window shard of a sparse matrix."""
+
+    index: int
+    win_start: int
+    win_end: int
+    row_start: int
+    rows: int
+    nnz_start: int
+    nnz: int
+    halo: np.ndarray     # (h,) i32 sorted unique global B/Y-row ids
+    csr: SparseCSR       # (rows, max(h,1)) halo-remapped local matrix
+    cfg: TuneConfig      # this shard's tuned plan-selection config
+
+
+def _make_shards(a: SparseCSR, n_shards: int) -> list[tuple]:
+    bounds = shard_windows(a, n_shards)
+    out = []
+    for p in range(n_shards):
+        w0, w1 = int(bounds[p]), int(bounds[p + 1])
+        r0 = min(w0 * WINDOW, a.m)
+        r1 = max(min(w1 * WINDOW, a.m), r0)
+        halo, sub = column_halo(a, r0, r1)
+        out.append((p, w0, w1, r0, r1, halo, sub,
+                    int(a.indptr[r0]), int(a.indptr[r1])))
+    return out
+
+
+def _combine_run_cfg(cfgs: list[TuneConfig], bk, ts_tile) -> TuneConfig:
+    """One kernel-tile config every shard can run: min tiles across
+    shards (VMEM-safe on all of them), always-legal grid order."""
+    def opt_min(vals):
+        got = [v for v in vals if v is not None]
+        return min(got) if got else None
+
+    return TuneConfig(
+        kt=min(c.kt for c in cfgs),
+        nt=min(c.nt for c in cfgs),
+        kf_tile=min(c.kf_tile for c in cfgs),
+        yt=opt_min([c.yt for c in cfgs]),
+        xt=opt_min([c.xt for c in cfgs]),
+        threshold=None, bk=bk, ts_tile=ts_tile,
+        grid_order="n_outer", source="dist",
+    )
+
+
+def _offset_pos(pos: np.ndarray, off: int) -> np.ndarray:
+    """Shift shard-local canonical nnz positions to global (−1 stays)."""
+    return np.where(pos >= 0, pos + off, -1).astype(np.int32)
+
+
+# ----------------------------------------------------------- partitions ---
+@dataclasses.dataclass(frozen=True)
+class SpMMPartition:
+    """Window-sharded SpMM execution plan for one sparse matrix."""
+
+    m: int
+    k: int
+    nnz: int
+    n_shards: int
+    shards: list[Shard]
+    stacked: dict[str, jnp.ndarray]  # (P, ...) leading shard axis (+halo)
+    wmax: int                        # windows per shard, padded
+    rows_pad: int                    # = wmax * WINDOW, local C height
+    run_cfg: TuneConfig              # kernel tiles every shard can run
+    out_gather: jnp.ndarray          # (m,) stacked-row id of global row
+    meta: dict[str, Any]
+
+
+def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
+                   threshold: int | None = None, tune="model",
+                   bk: int | None = None, ts_tile: int | None = None,
+                   tune_n: int = 128) -> SpMMPartition:
+    """Split + per-shard tune + preprocess + pad/stack for sharded SpMM.
+
+    ``tune`` accepts ``"model"``/``"off"``/a :class:`TuneConfig` (the
+    empirical ``"search"`` mode times through the single-device apply
+    and is not meaningful per shard). ``bk``/``ts_tile`` are unified
+    across shards (stacked block shapes must agree); each shard still
+    gets its own threshold and kernel tiles.
+    """
+    if tune == "search":
+        raise ValueError("partition_spmm: per-shard tune='search' is not "
+                         "supported; use 'model', 'off' or a TuneConfig")
+    # One global feature pass fixes the common block geometry.
+    base = tune_spmm(a, mode=mode, threshold=threshold, tune=tune,
+                     n=tune_n, bk=bk, ts_tile=ts_tile)
+    bk_c = bk if bk is not None else (base.bk or preprocess.DEFAULT_BK_SPMM)
+    ts_c = ts_tile if ts_tile is not None else (base.ts_tile or 32)
+
+    raw = _make_shards(a, n_shards)
+    forced = (spmm_threshold_for_mode(mode, threshold)
+              if mode != "hybrid" else threshold)
+    shards, plans = [], []
+    for p, w0, w1, r0, r1, halo, sub, nz0, nz1 in raw:
+        cfg = tune_spmm(sub, mode=mode, threshold=forced, tune=tune,
+                        n=tune_n, bk=bk_c, ts_tile=ts_c)
+        thr = spmm_threshold_for_mode(mode, cfg.threshold)
+        plan = preprocess.preprocess_spmm(sub, thr, cfg=cfg)
+        shards.append(Shard(p, w0, w1, r0, r1 - r0, nz0, nz1 - nz0,
+                            halo, sub, cfg))
+        plans.append(plan)
+
+    wmax = max(1, max(s.win_end - s.win_start for s in shards))
+    rows_pad = wmax * WINDOW
+    na = max(p.tc.n_active for p in plans)
+    nb = max(p.tc.nblk + (na - p.tc.n_active) for p in plans)
+    nt = max(p.vpu.ntiles for p in plans)
+    hmax = max(1, max(int(s.halo.size) for s in shards))
+
+    tc_vals = np.zeros((n_shards, nb, WINDOW, bk_c), np.float32)
+    tc_cols = np.zeros((n_shards, nb, bk_c), np.int32)
+    tc_rank = np.zeros((n_shards, nb), np.int32)
+    tc_pos = np.full((n_shards, nb, WINDOW, bk_c), -1, np.int32)
+    tc_active_row = np.zeros((n_shards, na * WINDOW), np.int32)
+    vpu_vals = np.zeros((n_shards, nt, ts_c), np.float32)
+    vpu_cols = np.zeros((n_shards, nt, ts_c), np.int32)
+    vpu_row = np.zeros((n_shards, nt), np.int32)
+    vpu_pos = np.full((n_shards, nt, ts_c), -1, np.int32)
+    halo_arr = np.zeros((n_shards, hmax), np.int32)
+
+    for p, (shard, plan) in enumerate(zip(shards, plans)):
+        tc, vpu = plan.tc, plan.vpu
+        nblk, nact = tc.nblk, tc.n_active
+        tc_vals[p, :nblk] = tc.vals
+        tc_cols[p, :nblk] = tc.cols
+        tc_pos[p, :nblk] = _offset_pos(tc.pos, shard.nnz_start)
+        # Real ranks, then one dummy block per missing rank (so the
+        # Pallas kernel writes every compacted output block), then
+        # repeat the last rank (accumulates zeros).
+        rank_pad = np.full(nb, na - 1, np.int32)
+        rank_pad[:nblk] = tc.rank
+        rank_pad[nblk:nblk + (na - nact)] = np.arange(nact, na, dtype=np.int32)
+        tc_rank[p] = rank_pad
+        active_rows = (tc.active_win[:, None].astype(np.int64) * WINDOW
+                       + np.arange(WINDOW)[None, :]).reshape(-1)
+        tc_active_row[p, :nact * WINDOW] = active_rows
+        ntl = vpu.ntiles
+        vpu_vals[p, :ntl] = vpu.vals
+        vpu_cols[p, :ntl] = vpu.cols
+        vpu_row[p, :ntl] = vpu.row
+        vpu_pos[p, :ntl] = _offset_pos(vpu.pos, shard.nnz_start)
+        halo_arr[p, :shard.halo.size] = shard.halo
+
+    out_gather = np.zeros(a.m, np.int32)
+    for shard in shards:
+        rr = np.arange(shard.rows)
+        out_gather[shard.row_start + rr] = shard.index * rows_pad + rr
+
+    stacked = {k: jnp.asarray(v) for k, v in dict(
+        tc_vals=tc_vals, tc_cols=tc_cols, tc_rank=tc_rank,
+        tc_active_row=tc_active_row, tc_pos=tc_pos,
+        vpu_vals=vpu_vals, vpu_cols=vpu_cols, vpu_row=vpu_row,
+        vpu_pos=vpu_pos, halo=halo_arr).items()}
+    meta = {
+        "balance": balance_report(
+            np.asarray([s.nnz for s in shards], np.int64), n_shards),
+        "halo_rows": [int(s.halo.size) for s in shards],
+        "shard_nnz": [s.nnz for s in shards],
+        "mode": mode,
+    }
+    return SpMMPartition(a.m, a.k, a.nnz, n_shards, shards, stacked,
+                         wmax, rows_pad,
+                         _combine_run_cfg([s.cfg for s in shards], bk_c, ts_c),
+                         jnp.asarray(out_gather), meta)
+
+
+@dataclasses.dataclass(frozen=True)
+class SDDMMPartition:
+    """Window-sharded SDDMM execution plan for one sparse mask."""
+
+    m: int
+    k: int
+    nnz: int
+    n_shards: int
+    shards: list[Shard]
+    stacked: dict[str, jnp.ndarray]
+    wmax: int
+    rows_pad: int
+    nnz_pad: int                     # local padded nnz per shard
+    run_cfg: TuneConfig
+    x_take: jnp.ndarray              # (P*rows_pad,) global X row per slot
+    nnz_gather: jnp.ndarray          # (nnz,) stacked slot of global nnz p
+    meta: dict[str, Any]
+
+
+def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
+                    threshold: int | None = None, tune="model",
+                    bk: int | None = None, ts_tile: int | None = None,
+                    tune_kf: int = 128) -> SDDMMPartition:
+    """SDDMM flavour of :func:`partition_spmm` (same sharding geometry;
+    scores come back in canonical global nnz order via ``nnz_gather``)."""
+    if tune == "search":
+        raise ValueError("partition_sddmm: per-shard tune='search' is not "
+                         "supported; use 'model', 'off' or a TuneConfig")
+    base = tune_sddmm(a, mode=mode, threshold=threshold, tune=tune,
+                      kf=tune_kf, bk=bk, ts_tile=ts_tile)
+    bk_c = bk if bk is not None else (base.bk or preprocess.DEFAULT_BK_SDDMM)
+    ts_c = ts_tile if ts_tile is not None else (base.ts_tile or 32)
+
+    raw = _make_shards(a, n_shards)
+    forced = (sddmm_threshold_for_mode(mode, bk_c, threshold)
+              if mode != "hybrid" else threshold)
+    shards, plans = [], []
+    for p, w0, w1, r0, r1, halo, sub, nz0, nz1 in raw:
+        cfg = tune_sddmm(sub, mode=mode, threshold=forced, tune=tune,
+                         kf=tune_kf, bk=bk_c, ts_tile=ts_c)
+        thr = sddmm_threshold_for_mode(mode, bk_c, cfg.threshold)
+        plan = preprocess.preprocess_sddmm(sub, thr, cfg=cfg)
+        shards.append(Shard(p, w0, w1, r0, r1 - r0, nz0, nz1 - nz0,
+                            halo, sub, cfg))
+        plans.append(plan)
+
+    wmax = max(1, max(s.win_end - s.win_start for s in shards))
+    rows_pad = wmax * WINDOW
+    nb = max(p.tc.nblk for p in plans)
+    ntl = max(p.vpu.ntiles for p in plans)
+    hmax = max(1, max(int(s.halo.size) for s in shards))
+    nnz_pad = max(1, max(s.nnz for s in shards))
+
+    tc_cols = np.zeros((n_shards, nb, bk_c), np.int32)
+    tc_bitmap = np.zeros((n_shards, nb, bk_c), np.uint32)
+    tc_window = np.zeros((n_shards, nb), np.int32)
+    tc_out_pos = np.full((n_shards, nb, WINDOW, bk_c), -1, np.int32)
+    vpu_rows = np.zeros((n_shards, ntl, ts_c), np.int32)
+    vpu_cols = np.zeros((n_shards, ntl, ts_c), np.int32)
+    vpu_out_pos = np.zeros((n_shards, ntl, ts_c), np.int32)
+    vpu_mask = np.zeros((n_shards, ntl, ts_c), bool)
+    halo_arr = np.zeros((n_shards, hmax), np.int32)
+
+    for p, (shard, plan) in enumerate(zip(shards, plans)):
+        tc, vpu = plan.tc, plan.vpu
+        tc_cols[p, :tc.nblk] = tc.cols
+        tc_bitmap[p, :tc.nblk] = tc.bitmap
+        tc_window[p, :tc.nblk] = tc.window
+        tc_out_pos[p, :tc.nblk] = plan.tc_out_pos  # shard-local positions
+        vpu_rows[p, :vpu.ntiles] = vpu.rows
+        vpu_cols[p, :vpu.ntiles] = vpu.cols
+        vpu_out_pos[p, :vpu.ntiles] = vpu.out_pos
+        vpu_mask[p, :vpu.ntiles] = vpu.mask
+        halo_arr[p, :shard.halo.size] = shard.halo
+
+    x_take = np.zeros(n_shards * rows_pad, np.int32)
+    nnz_gather = np.zeros(a.nnz, np.int32)
+    for shard in shards:
+        sl = slice(shard.index * rows_pad, (shard.index + 1) * rows_pad)
+        x_take[sl] = np.clip(shard.row_start + np.arange(rows_pad),
+                             0, max(a.m - 1, 0))
+        nnz_gather[shard.nnz_start:shard.nnz_start + shard.nnz] = \
+            shard.index * nnz_pad + np.arange(shard.nnz)
+
+    stacked = {k: jnp.asarray(v) for k, v in dict(
+        tc_cols=tc_cols, tc_bitmap=tc_bitmap, tc_window=tc_window,
+        tc_out_pos=tc_out_pos, vpu_rows=vpu_rows, vpu_cols=vpu_cols,
+        vpu_out_pos=vpu_out_pos, vpu_mask=vpu_mask,
+        halo=halo_arr).items()}
+    meta = {
+        "balance": balance_report(
+            np.asarray([s.nnz for s in shards], np.int64), n_shards),
+        "halo_rows": [int(s.halo.size) for s in shards],
+        "shard_nnz": [s.nnz for s in shards],
+        "mode": mode,
+    }
+    return SDDMMPartition(a.m, a.k, a.nnz, n_shards, shards, stacked,
+                          wmax, rows_pad, nnz_pad,
+                          _combine_run_cfg([s.cfg for s in shards],
+                                           bk_c, ts_c),
+                          jnp.asarray(x_take), jnp.asarray(nnz_gather), meta)

@@ -1,0 +1,204 @@
+"""Sharded + batched hybrid sparse execution (`shard_map` / `vmap`).
+
+The two scale axes the single-device operators lack:
+
+* :func:`spmm_sharded` / :func:`sddmm_sharded` — run one Libra plan
+  split into contiguous-window shards (:mod:`repro.dist.partition`)
+  over a named mesh axis with ``shard_map``. Each device runs the
+  *existing* single-device fused hybrid apply on its shard; because the
+  output is row-partitioned by construction (a window never straddles
+  shards), there is **no cross-device combine** — the only collectives
+  are on the dense operand (see the halo model below).
+* :class:`BatchedSpMM` / :class:`BatchedSDDMM` — apply one plan to a
+  ``(batch, k, n)`` stack of dense panels via ``vmap``, compiled once
+  per batch shape into a single AOT-cached executable (the serving
+  shape: one graph, many feature panels in flight).
+
+Halo model
+----------
+Each shard's plan columns are remapped onto its *halo* — the
+sorted-unique set of dense-operand rows the shard actually touches
+(precomputed host-side by the partitioner). At execution time the
+device materializes only ``B[halo]`` (one gather), never all of B,
+bounding the per-device dense working set by the shard's column
+footprint. The dense operand itself can arrive two ways
+(``b_layout=`` / ``y_layout=``):
+
+* ``"replicated"`` (default) — every device holds B and gathers its
+  halo rows locally; zero communication, memory cost ``O(k·n)`` per
+  device.
+* ``"rowshard"`` — B rows are sharded over the same mesh axis; the body
+  all-gathers the panels over the axis and then halo-compacts. Memory
+  cost before compaction is transient; the resident set after the
+  gather is still ``O(halo·n)``. (A future point-to-point halo exchange
+  can replace the all-gather without touching callers — the halo maps
+  already say exactly which rows each device needs.)
+
+Mesh/batch knobs
+----------------
+``mesh`` + ``axis`` name the shard axis (``mesh.shape[axis]`` must
+equal the partition's ``n_shards``); ``backend=`` selects XLA reference
+vs Pallas kernels per device; ``edge_vals=`` (SpMM) revalues the plan
+from a replicated canonical-nnz value vector inside the body (the
+training path — pattern static, values per step). Batched ops take the
+batch as the leading axis of the dense stack and cache one executable
+per (batch shape, dtype, backend).
+
+Every public entry point here is traceable — it can sit under an outer
+``jax.jit`` (the training step) or be AOT-compiled by callers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.spmm import LibraSpMM
+from repro.core.sddmm import LibraSDDMM
+from repro.kernels import ref
+from repro.kernels.ops import _pad_to, cached_compile, sddmm_apply, spmm_apply
+from repro.dist.partition import SDDMMPartition, SpMMPartition
+
+SHARD_AXIS = "shards"
+_LAYOUTS = ("replicated", "rowshard")
+
+
+def _local(stacked: dict) -> tuple[dict, jnp.ndarray]:
+    """Strip the length-1 shard axis shard_map leaves on each block and
+    split off the halo map."""
+    local = {k: v[0] for k, v in stacked.items()}
+    return local, local.pop("halo")
+
+
+def spmm_sharded(part: SpMMPartition, b: jnp.ndarray, *, mesh: Mesh,
+                 axis: str = SHARD_AXIS, backend: str = "xla",
+                 edge_vals: jnp.ndarray | None = None,
+                 b_layout: str = "replicated",
+                 interpret: bool = True) -> jnp.ndarray:
+    """C = A @ B over a mesh axis; each device applies its shard's plan.
+
+    ``edge_vals`` (canonical global nnz order, replicated) revalues
+    every shard's plan inside the body — the differentiable-values
+    path. Output rows are partitioned by shard, so the result needs no
+    reduction: one gather (``part.out_gather``) reassembles C.
+    """
+    assert b_layout in _LAYOUTS, b_layout
+    assert int(mesh.shape[axis]) == part.n_shards, (mesh.shape, part.n_shards)
+    rowshard = b_layout == "rowshard"
+
+    def body(stacked, b_in, *ev):
+        local, halo = _local(stacked)
+        b_full = (jax.lax.all_gather(b_in, axis, axis=0, tiled=True)
+                  if rowshard else b_in)
+        b_halo = jnp.take(b_full, halo, axis=0)
+        if ev:
+            local = ref.revalue_spmm_arrays(local, ev[0])
+        return spmm_apply(local, b_halo, m=part.rows_pad, nwin=part.wmax,
+                          backend=backend, cfg=part.run_cfg,
+                          interpret=interpret)
+
+    spec_plan = {k: P(axis) for k in part.stacked}
+    in_specs = [spec_plan, P(axis) if rowshard else P()]
+    args = [part.stacked, _pad_to(b, 0, part.n_shards) if rowshard else b]
+    if edge_vals is not None:
+        in_specs.append(P())
+        args.append(edge_vals)
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=P(axis), check_rep=False)
+    out = fn(*args)                       # (P * rows_pad, n)
+    return jnp.take(out, part.out_gather, axis=0)
+
+
+def sddmm_sharded(part: SDDMMPartition, x: jnp.ndarray, y: jnp.ndarray, *,
+                  mesh: Mesh, axis: str = SHARD_AXIS,
+                  backend: str = "xla", y_layout: str = "replicated",
+                  interpret: bool = True) -> jnp.ndarray:
+    """values = sample(X·Yᵀ, sparsity(A)) over a mesh axis, canonical
+    global nnz order.
+
+    X is row-sharded to match the output rows (``part.x_take`` lays the
+    global rows out in padded per-shard panels before the shard_map);
+    Y follows ``y_layout`` like B in :func:`spmm_sharded`. Each shard
+    scatters into its local nnz slice; ``part.nnz_gather`` reassembles
+    the canonical global vector — again no cross-device combine.
+    """
+    assert y_layout in _LAYOUTS, y_layout
+    assert int(mesh.shape[axis]) == part.n_shards, (mesh.shape, part.n_shards)
+    rowshard = y_layout == "rowshard"
+    x_panels = jnp.take(x, part.x_take, axis=0)   # (P * rows_pad, kf)
+
+    def body(stacked, x_in, y_in):
+        local, halo = _local(stacked)
+        y_full = (jax.lax.all_gather(y_in, axis, axis=0, tiled=True)
+                  if rowshard else y_in)
+        y_halo = jnp.take(y_full, halo, axis=0)
+        return sddmm_apply(local, x_in, y_halo, nnz=part.nnz_pad,
+                           backend=backend, cfg=part.run_cfg,
+                           interpret=interpret)
+
+    spec_plan = {k: P(axis) for k in part.stacked}
+    in_specs = (spec_plan, P(axis), P(axis) if rowshard else P())
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(axis), check_rep=False)
+    out = fn(part.stacked, x_panels,
+             _pad_to(y, 0, part.n_shards) if rowshard else y)
+    return jnp.take(out.reshape(-1), part.nnz_gather, axis=0)
+
+
+# ----------------------------------------------------------- batched ---
+class BatchedSpMM:
+    """Apply one Libra plan to a stack of B panels: ``(batch, k, n) →
+    (batch, m, n)`` via ``vmap`` over the single-device fused apply,
+    AOT-compiled once per (batch shape, dtype, backend)."""
+
+    def __init__(self, a, **op_kwargs):
+        self.op = LibraSpMM(a, **op_kwargs)
+        self._cache: dict = {}
+
+    def __call__(self, b_stack: jnp.ndarray, backend: str = "xla",
+                 interpret: bool = True) -> jnp.ndarray:
+        op = self.op
+        assert b_stack.ndim == 3 and b_stack.shape[1] == op.k, b_stack.shape
+
+        def batched(arrs, bb):
+            one = functools.partial(spmm_apply, arrs, m=op.m, nwin=op.nwin,
+                                    backend=backend, cfg=op.tune_config,
+                                    interpret=interpret)
+            return jax.vmap(one)(bb)
+
+        fn = cached_compile(
+            self._cache,
+            (b_stack.shape, str(b_stack.dtype), backend, interpret),
+            lambda: jax.jit(batched).lower(op.arrays, b_stack))
+        return fn(op.arrays, b_stack)
+
+
+class BatchedSDDMM:
+    """``(batch, m, kf) × (batch, k, kf) → (batch, nnz)`` via ``vmap``
+    over the single-device fused apply (one AOT executable per shape)."""
+
+    def __init__(self, a, **op_kwargs):
+        self.op = LibraSDDMM(a, **op_kwargs)
+        self._cache: dict = {}
+
+    def __call__(self, x_stack: jnp.ndarray, y_stack: jnp.ndarray,
+                 backend: str = "xla", interpret: bool = True
+                 ) -> jnp.ndarray:
+        op = self.op
+        assert x_stack.ndim == 3 and y_stack.ndim == 3
+
+        def batched(arrs, xx, yy):
+            one = functools.partial(sddmm_apply, arrs, nnz=op.nnz,
+                                    backend=backend, cfg=op.tune_config,
+                                    interpret=interpret)
+            return jax.vmap(one)(xx, yy)
+
+        fn = cached_compile(
+            self._cache,
+            (x_stack.shape, y_stack.shape, str(x_stack.dtype), backend,
+             interpret),
+            lambda: jax.jit(batched).lower(op.arrays, x_stack, y_stack))
+        return fn(op.arrays, x_stack, y_stack)

@@ -127,8 +127,9 @@ def sddmm_apply(arrs, x, y, *, nnz: int, backend: str = "xla",
     """Hybrid SDDMM: values[nnz] = sample(X @ Yᵀ) in canonical CSR order.
 
     ``cfg.kf_tile`` tiles the feature dimension; ``cfg.yt`` streams Y in
-    row panels (padded here so panel count divides evenly — padded rows
-    are zeros and no real column index points at them).
+    row panels and ``cfg.xt`` streams X (VPU kernel) the same way —
+    padded here so panel counts divide evenly; padded rows are zeros and
+    no real row/column index points at them.
     """
     cfg = DEFAULT_TUNE if cfg is None else cfg
     if backend == "xla":
@@ -142,10 +143,12 @@ def sddmm_apply(arrs, x, y, *, nnz: int, backend: str = "xla",
     x_p = _pad_to(x, 0, WINDOW)
     yt = None if cfg.yt is None else min(cfg.yt, y.shape[0])
     y_p = y if yt is None else _pad_to(y, 0, yt)
+    xt = None if cfg.xt is None else min(cfg.xt, x.shape[0])
+    x_v = x if xt is None else _pad_to(x, 0, xt)
     s_tc = sddmm_mxu(arrs["tc_cols"], arrs["tc_bitmap"], arrs["tc_window"],
                      x_p, y_p, kf_tile=kt, yt=yt, interpret=interpret)
-    s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x, y_p, kf_tile=kt,
-                     yt=yt, interpret=interpret)
+    s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x_v, y_p,
+                     kf_tile=kt, yt=yt, xt=xt, interpret=interpret)
     s_el = jnp.where(arrs["vpu_mask"], s_el, 0.0)
     # Fused combine: one scatter of both streams into the canonical nnz
     # vector (slot nnz swallows -1/masked padding).

@@ -3,17 +3,19 @@
 One grid step processes a tile of ``TS`` isolated non-zero elements:
 ``s[j] = ⟨X[rows[j]], Y[cols[j]]⟩``. The ``TS`` X-rows and Y-rows of a
 tile are fetched with two batched ``take``s on the resident feature
-tiles (vectorized gather — the paper's CUDA-core stream with Float4
+panels (vectorized gather — the paper's CUDA-core stream with Float4
 chunks → 128-lane VMEM rows here, but without the per-element scalar
 loop); the dot reduction runs on the VPU.
 
-Two streamed dimensions keep the working set bounded (k-tiling symmetry
-with SpMM): the feature dimension is tiled (``kf_tile``) with in-VMEM
-accumulation, and Y rows stream in ``(yt, kf_tile)`` panels on a third
-grid dimension — elements whose Y-row lives in another panel are masked
-to zero, so each element is counted exactly once across the panel
-sweep. X feature tiles stay fully resident (rows are scattered across
-windows); streaming X too is a ROADMAP follow-up.
+Three streamed dimensions keep the working set bounded (k-tiling
+symmetry with SpMM, completed): the feature dimension is tiled
+(``kf_tile``) with in-VMEM accumulation, Y rows stream in
+``(yt, kf_tile)`` panels, and X rows stream in ``(xt, kf_tile)`` panels
+on a fourth grid dimension. An element contributes only on the one
+(X-panel, Y-panel) step where both of its rows are resident — on every
+other step at least one gathered row is masked to zero, so each element
+is counted exactly once across the sweep. No whole-operand VMEM
+residency remains.
 """
 from __future__ import annotations
 
@@ -28,13 +30,14 @@ from repro.kernels.gather import panel_gather
 
 def _kernel(rows_ref, cols_ref, x_ref, y_ref, out_ref):
     f = pl.program_id(1)   # feature tile
-    kk = pl.program_id(2)  # Y row-panel index (fastest)
+    kk = pl.program_id(2)  # Y row-panel index
+    xx = pl.program_id(3)  # X row-panel index (fastest)
 
-    xg = jnp.take(x_ref[...], rows_ref[0], axis=0)              # (ts, kft)
+    xg, _ = panel_gather(x_ref, rows_ref[0], xx)                # (ts, kft)
     yg, _ = panel_gather(y_ref, cols_ref[0], kk)                # (ts, kft)
     partial = jnp.sum(xg * yg, axis=1)[None, :]                 # (1, ts)
 
-    first = jnp.logical_and(f == 0, kk == 0)
+    first = jnp.logical_and(f == 0, jnp.logical_and(kk == 0, xx == 0))
 
     @pl.when(first)
     def _():
@@ -46,32 +49,36 @@ def _kernel(rows_ref, cols_ref, x_ref, y_ref, out_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kf_tile", "yt", "interpret"))
+    jax.jit, static_argnames=("kf_tile", "yt", "xt", "interpret"))
 def sddmm_vpu(rows, cols, x, y, *, kf_tile: int = 128,
-              yt: int | None = None, interpret: bool = True):
+              yt: int | None = None, xt: int | None = None,
+              interpret: bool = True):
     """Element scores, shape ``(ntiles, ts)`` (mask applied by the caller).
 
-    ``yt`` rows of Y are resident per grid step (``None`` = all of Y);
-    ``y.shape[0]`` must be a multiple of ``yt`` (ops.py pads).
+    ``yt`` rows of Y and ``xt`` rows of X are resident per grid step
+    (``None`` = the whole operand); ``y.shape[0]`` must be a multiple of
+    ``yt`` and ``x.shape[0]`` of ``xt`` (ops.py pads both).
     """
     ntiles, ts = rows.shape
-    kf = x.shape[1]
+    mrows, kf = x.shape
     kcols = y.shape[0]
     yt = kcols if yt is None else min(yt, kcols)
+    xt = mrows if xt is None else min(xt, mrows)
     assert kf % kf_tile == 0, (kf, kf_tile)
     assert kcols % yt == 0, (kcols, yt)
-    grid = (ntiles, kf // kf_tile, kcols // yt)
+    assert mrows % xt == 0, (mrows, xt)
+    grid = (ntiles, kf // kf_tile, kcols // yt, mrows // xt)
 
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, ts), lambda i, f, kk: (i, 0)),
-            pl.BlockSpec((1, ts), lambda i, f, kk: (i, 0)),
-            pl.BlockSpec((x.shape[0], kf_tile), lambda i, f, kk: (0, f)),
-            pl.BlockSpec((yt, kf_tile), lambda i, f, kk: (kk, f)),
+            pl.BlockSpec((1, ts), lambda i, f, kk, xx: (i, 0)),
+            pl.BlockSpec((1, ts), lambda i, f, kk, xx: (i, 0)),
+            pl.BlockSpec((xt, kf_tile), lambda i, f, kk, xx: (xx, f)),
+            pl.BlockSpec((yt, kf_tile), lambda i, f, kk, xx: (kk, f)),
         ],
-        out_specs=pl.BlockSpec((1, ts), lambda i, f, kk: (i, 0)),
+        out_specs=pl.BlockSpec((1, ts), lambda i, f, kk, xx: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((ntiles, ts), jnp.float32),
         interpret=interpret,
     )(rows, cols, x, y)

@@ -36,16 +36,25 @@ class GraphOps:
     """Preprocessed Libra plans for one graph: A, A^T, and SDDMM(A).
 
     ``tune`` threads the plan-selection subsystem (:mod:`repro.tune`)
-    through the training path: ``"model"`` picks per-graph thresholds
+    through the training path: ``"off"`` (the default here, for cheap
+    construction and backward compatibility) keeps the module defaults;
+    ``"model"`` — recommended for real training runs, and the default
+    on :class:`repro.dist.DistGraphOps` — picks per-graph thresholds
     and tile sizes analytically (A and Aᵀ each get their own config —
-    their sparsity patterns differ), ``"off"`` (default) keeps the
-    module defaults.
+    their sparsity patterns differ).
+
+    ``backend`` selects the apply path for *every* op in the training
+    graph, forward and backward: ``"xla"`` (default) runs the jnp
+    reference, ``"pallas"`` the TPU kernels (interpret mode on CPU).
+    The tuned configs are threaded into each apply, so a tuned operator
+    trains through the exact plan the tuner priced.
     """
 
     def __init__(self, a: SparseCSR, mode: str = "hybrid",
                  spmm_threshold: int | None = None,
                  sddmm_threshold: int | None = None,
-                 tune: str = "off"):
+                 tune: str = "off", backend: str = "xla",
+                 interpret: bool = True):
         from repro.core.sddmm import threshold_for_mode as sddmm_thr
         from repro.core.spmm import threshold_for_mode as spmm_thr
         from repro.tune import matrix_features, tune_sddmm, tune_spmm
@@ -53,6 +62,8 @@ class GraphOps:
         self.a = a
         self.m, self.k = a.shape
         self.nnz = a.nnz
+        self.backend = backend
+        self.interpret = interpret
         self.nwin = num_windows(a.m)
         at, self.perm = transpose_csr(a)
         self.nwin_t = num_windows(at.m)
@@ -89,16 +100,18 @@ class GraphOps:
         """vals[p] = ⟨X[row_p], Y[col_p]⟩, differentiable in (x, y)."""
         return _sddmm_ev(self, x, y)
 
-    def fixed_spmm(self, b, backend: str = "xla"):
+    def fixed_spmm(self, b, backend: str | None = None):
         """C = A @ B with the plan's baked-in values (no grad wrt values)."""
         return spmm_apply(self.arrs, b, m=self.m, nwin=self.nwin,
-                          backend=backend, cfg=self.cfg)
+                          backend=backend or self.backend, cfg=self.cfg,
+                          interpret=self.interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _spmm_ev(g: GraphOps, edge_vals, b):
     arrs = ref.revalue_spmm_arrays(g.arrs, edge_vals)
-    return spmm_apply(arrs, b, m=g.m, nwin=g.nwin, backend="xla")
+    return spmm_apply(arrs, b, m=g.m, nwin=g.nwin, backend=g.backend,
+                      cfg=g.cfg, interpret=g.interpret)
 
 
 def _spmm_ev_fwd(g, edge_vals, b):
@@ -109,9 +122,11 @@ def _spmm_ev_bwd(g, resid, d_c):
     edge_vals, b = resid
     # dB = A(v)^T @ dC — SpMM on the transposed plan with permuted values.
     arrs_t = ref.revalue_spmm_arrays(g.arrs_t, edge_vals[g.perm_dev])
-    d_b = spmm_apply(arrs_t, d_c, m=g.k, nwin=g.nwin_t, backend="xla")
+    d_b = spmm_apply(arrs_t, d_c, m=g.k, nwin=g.nwin_t, backend=g.backend,
+                     cfg=g.cfg_t, interpret=g.interpret)
     # dv[p] = dC[row_p] · B[col_p] — SDDMM with A's sparsity.
-    d_vals = sddmm_apply(g.arrs_sd, d_c, b, nnz=g.nnz, backend="xla")
+    d_vals = sddmm_apply(g.arrs_sd, d_c, b, nnz=g.nnz, backend=g.backend,
+                         cfg=g.cfg_sd, interpret=g.interpret)
     return d_vals.astype(edge_vals.dtype), d_b.astype(b.dtype)
 
 
@@ -120,7 +135,8 @@ _spmm_ev.defvjp(_spmm_ev_fwd, _spmm_ev_bwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _sddmm_ev(g: GraphOps, x, y):
-    return sddmm_apply(g.arrs_sd, x, y, nnz=g.nnz, backend="xla")
+    return sddmm_apply(g.arrs_sd, x, y, nnz=g.nnz, backend=g.backend,
+                       cfg=g.cfg_sd, interpret=g.interpret)
 
 
 def _sddmm_ev_fwd(g, x, y):
@@ -131,9 +147,11 @@ def _sddmm_ev_bwd(g, resid, d_vals):
     x, y = resid
     # dX = A(dv) @ Y ; dY = A(dv)^T @ X — both SpMMs through Libra plans.
     arrs = ref.revalue_spmm_arrays(g.arrs, d_vals)
-    d_x = spmm_apply(arrs, y, m=g.m, nwin=g.nwin, backend="xla")
+    d_x = spmm_apply(arrs, y, m=g.m, nwin=g.nwin, backend=g.backend,
+                     cfg=g.cfg, interpret=g.interpret)
     arrs_t = ref.revalue_spmm_arrays(g.arrs_t, d_vals[g.perm_dev])
-    d_y = spmm_apply(arrs_t, x, m=g.k, nwin=g.nwin_t, backend="xla")
+    d_y = spmm_apply(arrs_t, x, m=g.k, nwin=g.nwin_t, backend=g.backend,
+                     cfg=g.cfg_t, interpret=g.interpret)
     return d_x.astype(x.dtype), d_y.astype(y.dtype)
 
 

@@ -30,7 +30,7 @@ import tempfile
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import TuneConfig
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2  # v2: TuneConfig gained xt (SDDMM X-row panel streaming)
 _ENV_VAR = "REPRO_TUNE_CACHE_DIR"
 
 

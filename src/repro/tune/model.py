@@ -13,7 +13,7 @@ features:
 * a **VMEM footprint model** for each of the four kernels: the bytes a
   single pipelined grid step keeps resident (Pallas double-buffers the
   streamed input blocks, hence the ×2 on inputs). Tile sizes (``kt``,
-  ``nt``, ``kf_tile``, ``yt``) are chosen as the largest
+  ``nt``, ``kf_tile``, ``yt``, ``xt``) are chosen as the largest
   hardware-aligned candidates whose footprint stays inside
   ``VMEM_BUDGET_BYTES`` — the TPU analogue of CUDA occupancy sizing;
 * a **grid-order pick** (``n_outer`` vs ``block_outer``) from the block
@@ -28,6 +28,7 @@ The result is a :class:`TuneConfig` — the single object every layer
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import warnings
 
 import numpy as np
@@ -46,6 +47,7 @@ _KT_CANDIDATES = (8192, 4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8)
 _NT_CANDIDATES = (512, 256, 128)
 _KF_CANDIDATES = (512, 256, 128)
 _YT_CANDIDATES = (8192, 4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8)
+_XT_CANDIDATES = (8192, 4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +66,7 @@ class TuneConfig:
     nt: int = 128            # SpMM lane tile (output columns per step)
     kf_tile: int = 128       # SDDMM feature tile
     yt: int | None = None    # SDDMM Y-row panel (None = all rows resident)
+    xt: int | None = None    # SDDMM VPU X-row panel (None = all rows resident)
     threshold: int | None = None  # TC/VPU split (None = operator default)
     bk: int | None = None    # condensed block depth (None = operator default)
     ts_tile: int | None = None    # VPU tile width (None = operator default)
@@ -158,18 +161,19 @@ def vmem_sddmm_bytes(cfg: TuneConfig, *, bk: int, ts: int, m_rows: int,
                      kcols: int, dtype=np.float32) -> int:
     """Resident bytes of one pipelined SDDMM grid step (max over kernels).
 
-    Both SDDMM kernels stream Y in ``(yt, kf_tile)`` row panels (the
-    k-tiling-symmetry satellite), so huge ``kcols`` masks stay bounded.
-    The VPU kernel still keeps the full X *feature tile* resident —
-    that residual ``m_rows`` term is why the tuner shrinks ``kf_tile``
-    on tall operands (streaming X too is a ROADMAP follow-up).
+    Every streamed operand dimension is bounded: both SDDMM kernels
+    stream Y in ``(yt, kf_tile)`` row panels, and the VPU kernel streams
+    X in ``(xt, kf_tile)`` row panels too (``xt=None`` keeps all of X
+    resident — the pre-streaming behavior). No whole-operand VMEM
+    residency remains.
     """
     it = _itemsize(dtype)
     kf = cfg.kf_tile
     yt = kcols if cfg.yt is None else min(cfg.yt, kcols)
+    xt = m_rows if cfg.xt is None else min(cfg.xt, m_rows)
     mxu = 2 * (WINDOW * kf * it + yt * kf * it + 2 * bk * 4) \
         + WINDOW * bk * it
-    vpu = 2 * (m_rows * kf * it + yt * kf * it + 2 * ts * 4) + ts * it
+    vpu = 2 * (xt * kf * it + yt * kf * it + 2 * ts * 4) + ts * it
     return max(mxu, vpu)
 
 
@@ -237,14 +241,14 @@ def _modeled_sddmm_time(feat: MatrixFeatures, threshold: int, *, kf: int,
 
 
 # ------------------------------------------------------------ tuners ---
-def _pick_tiles(fits, primary, secondary):
-    """Largest (primary, secondary) pair that fits, preferring a bigger
-    primary tile (more reuse per panel fetch) over a bigger secondary."""
-    for p in primary:
-        for s in secondary:
-            if fits(p, s):
-                return p, s
-    return primary[-1], secondary[-1]
+def _pick_tiles(fits, *candidate_lists):
+    """Largest candidate tuple that fits, preferring bigger values in
+    earlier lists (more reuse per panel fetch) over later ones; falls
+    back to the smallest of everything when nothing fits."""
+    for combo in itertools.product(*candidate_lists):
+        if fits(*combo):
+            return combo
+    return tuple(c[-1] for c in candidate_lists)
 
 
 def _pick_ts_tile(feat: MatrixFeatures) -> int:
@@ -326,8 +330,8 @@ def model_tune_sddmm(a: SparseCSR, *, kf: int = 128, dtype=np.float32,
     """Emit a full SDDMM :class:`TuneConfig` from matrix features.
 
     Warns (RuntimeWarning) when even the smallest tile candidates exceed
-    the budget — possible for very tall X, whose feature tile stays
-    fully resident in the VPU kernel (the documented residual term).
+    the budget (every operand dimension now streams — X included — so
+    this only happens for pathological ``bk``/``ts_tile`` overrides).
     """
     from repro.core import preprocess as P
 
@@ -343,22 +347,25 @@ def model_tune_sddmm(a: SparseCSR, *, kf: int = 128, dtype=np.float32,
 
     kfs = [c for c in _KF_CANDIDATES if c <= max(kf, _KF_CANDIDATES[-1])]
     yts = [c for c in _YT_CANDIDATES if c <= max(a.k, _YT_CANDIDATES[-1])]
+    xts = [c for c in _XT_CANDIDATES if c <= max(a.m, _XT_CANDIDATES[-1])]
 
-    def fits(yt, kft):
-        cfg = TuneConfig(kf_tile=kft, yt=yt)
+    # Largest (yt, kf_tile, xt) triple that fits, preferring a bigger Y
+    # panel (shared by both kernels), then a wider feature tile, then a
+    # bigger X panel (VPU-only).
+    def fits(yt_c, kf_c, xt_c):
+        cfg = TuneConfig(kf_tile=kf_c, yt=yt_c, xt=xt_c)
         return vmem_sddmm_bytes(cfg, bk=bk, ts=ts_tile, m_rows=a.m,
                                 kcols=a.k, dtype=dtype) <= budget
 
-    yt, kf_tile = _pick_tiles(fits, yts, kfs)
+    yt, kf_tile, xt = _pick_tiles(fits, yts, kfs, xts)
 
-    cfg = TuneConfig(kf_tile=kf_tile, yt=yt, threshold=threshold, bk=bk,
-                     ts_tile=ts_tile, source="model")
+    cfg = TuneConfig(kf_tile=kf_tile, yt=yt, xt=xt, threshold=threshold,
+                     bk=bk, ts_tile=ts_tile, source="model")
     step = vmem_sddmm_bytes(cfg, bk=bk, ts=ts_tile, m_rows=a.m, kcols=a.k,
                             dtype=dtype)
     if step > budget:
         warnings.warn(
             f"model_tune_sddmm: smallest tile candidates need {step} B "
-            f"per grid step, over the {budget} B VMEM budget (X feature "
-            f"tiles stay resident for m={a.m} rows — see ROADMAP)",
+            f"per grid step, over the {budget} B VMEM budget",
             RuntimeWarning, stacklevel=2)
     return cfg

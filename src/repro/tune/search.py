@@ -114,6 +114,8 @@ def sddmm_candidates(a: SparseCSR, *, kf: int, mode: str,
         cands = [DEFAULT_TUNE.replace(**default_plan), model]
         if model.yt is not None and model.yt // 2 >= 8:
             cands.append(model.replace(yt=model.yt // 2))
+        if model.xt is not None and model.xt // 2 >= 8:
+            cands.append(model.replace(xt=model.xt // 2))
     if threshold is None and mode == "hybrid" and model.threshold is not None:
         for t in (max(model.threshold // 2, 1), model.threshold * 2):
             cands.append(model.replace(threshold=t))

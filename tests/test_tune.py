@@ -129,14 +129,29 @@ def test_explicit_bk_ts_tile_reach_tuner_and_plan():
     assert LibraSpMM(a, tune="model").plan.vpu.ts == cfg.ts_tile
 
 
-def test_model_warns_when_budget_unreachable():
-    """Very tall X: the SDDMM VPU kernel keeps full X feature tiles
-    resident, so no tile candidate can fit — the model must say so
-    instead of silently emitting an over-budget config."""
+def test_tall_x_streams_inside_budget():
+    """Very tall X used to be un-fittable (the VPU kernel kept full X
+    feature tiles resident); with ``xt`` streaming the model bounds the
+    X panel instead of warning."""
+    import warnings as _warnings
+
     a = _sparse(50_000, 64, 200, seed=1)
-    with pytest.warns(RuntimeWarning, match="VMEM budget"):
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", RuntimeWarning)
         cfg = model_tune_sddmm(a, kf=128)
-    assert cfg.yt == 8  # still the least-bad choice
+    assert cfg.xt is not None and cfg.xt < a.m
+    step = vmem_sddmm_bytes(cfg, bk=cfg.bk, ts=cfg.ts_tile, m_rows=a.m,
+                            kcols=a.k)
+    assert step <= VMEM_BUDGET_BYTES
+
+
+def test_model_warns_on_pathological_overrides():
+    """Explicit plan parameters can still make every tile candidate
+    over-budget (a huge VPU tile is resident regardless of panel
+    sizes); the model must warn instead of silently emitting it."""
+    a = _sparse(64, 64, 100, seed=2)
+    with pytest.warns(RuntimeWarning, match="VMEM budget"):
+        model_tune_sddmm(a, kf=128, ts_tile=2**20)
 
 
 # ------------------------------------------------------------ search ---
@@ -277,7 +292,10 @@ def test_tuned_configs_bit_identical_outputs_sddmm(rng):
     y = jnp.asarray(rng.integers(-2, 3, (a.k, 64)).astype(np.float32))
     ref_out = None
     for tune in ("off", "model", TuneConfig(yt=16, kf_tile=128),
-                 TuneConfig(yt=8, threshold=8)):
+                 TuneConfig(yt=8, threshold=8),
+                 TuneConfig(xt=16, yt=16),     # X+Y panels stream together
+                 TuneConfig(xt=8)):            # X streams, Y resident
+
         op = LibraSDDMM(a, tune=tune)
         for backend in ("xla", "pallas"):
             out = np.asarray(op(x, y, backend=backend))
