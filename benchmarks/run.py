@@ -15,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig1,spmm,sddmm,"
-                         "ablations,gnn,roofline,dist)")
+                         "ablations,gnn,roofline,dist,serve)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON: "
                          "[{name, us_per_call, derived}, ...]")
@@ -30,6 +30,7 @@ def main() -> None:
         bench_gnn_e2e,
         bench_roofline,
         bench_sddmm,
+        bench_serve,
         bench_spmm,
     )
 
@@ -41,6 +42,7 @@ def main() -> None:
         "gnn": bench_gnn_e2e.run,
         "roofline": bench_roofline.run,
         "dist": bench_dist.run,
+        "serve": bench_serve.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     unknown = only - set(suites)

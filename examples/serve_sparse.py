@@ -1,0 +1,85 @@
+"""Sparse-operator serving demo: two graphs, many tenants, one engine.
+
+Registers two graphs (a GNN-style power-law graph and a FEM-style mixed
+matrix) in a :class:`~repro.serve.registry.GraphRegistry`, warms the
+AOT executables, then drives a mixed burst of SpMM/SDDMM requests from
+three "tenants" through the panel-bucketed
+:class:`~repro.serve.engine.SparseEngine` — plus a trained-GCN
+node-scoring round through :class:`~repro.serve.gnn_service.GNNService`
+— and prints the serving stats (throughput, padding waste, bucket
+occupancy, cache hits).
+
+    PYTHONPATH=src python examples/serve_sparse.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn as mgnn
+from repro.serve import GNNService, GraphRegistry, SparseEngine
+from repro.sparse.generate import mixed_csr, power_law_csr
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    graph = power_law_csr(1024, 1024, 12.0, seed=1)   # social-graph regime
+    fem = mixed_csr(768, 640, seed=2)                 # FEM/hybrid regime
+
+    registry = GraphRegistry(max_graphs=8, width_buckets=(32, 64, 128),
+                             panel_buckets=(1, 2, 4, 8))
+    registry.register(graph, name="tenantA/social", warm_widths=(64,))
+    registry.register(fem, name="tenantB/fem")
+    registry.register(graph, name="tenantC/social-alias")  # shared plan
+
+    engine = SparseEngine(registry)
+
+    # --- a mixed burst: three tenants, ragged widths, both operators
+    rids = {}
+    for i in range(6):
+        b = jnp.asarray(rng.standard_normal(
+            (graph.k, (48, 64, 57)[i % 3])).astype(np.float32))
+        who = ("tenantA/social", "tenantC/social-alias")[i % 2]
+        rids[engine.submit(who, "spmm", b=b)] = who
+    for i in range(3):
+        b = jnp.asarray(rng.standard_normal(
+            (fem.k, 96)).astype(np.float32))
+        rids[engine.submit("tenantB/fem", "spmm", b=b)] = "tenantB/fem"
+    x = jnp.asarray(rng.standard_normal((fem.m, 32)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((fem.k, 32)).astype(np.float32))
+    rids[engine.submit("tenantB/fem", "sddmm", x=x, y=y)] = "tenantB/fem"
+
+    results = engine.flush()
+    assert sorted(results) == sorted(rids)
+    print(f"served {len(results)} requests "
+          f"({sum(v.size for v in results.values())} output elements)")
+
+    # --- trained-GCN scoring through the same engine
+    service = GNNService(engine)
+    params = mgnn.init_gcn(jax.random.PRNGKey(0), [64, 64, 16])
+    service.register_gcn("tenantA/gcn", graph, params)
+    feats = jnp.asarray(rng.standard_normal(
+        (graph.m, 64)).astype(np.float32))
+    s1 = service.submit("tenantA/gcn", feats, node_ids=np.arange(10))
+    s2 = service.submit("tenantA/gcn", feats * 0.5, node_ids=np.arange(10))
+    scores = service.flush()
+    print(f"gcn scores for 10 nodes, 2 concurrent requests: "
+          f"{np.asarray(scores[s1])[0, :4].round(3).tolist()} ...")
+    assert scores[s2].shape == (10, 16)
+
+    st = engine.stats()
+    print("\n--- engine stats ---")
+    for key in ("submitted", "served", "flushes", "panels_executed",
+                "bucket_occupancy", "padding_waste", "exec_cache_hits",
+                "exec_cache_misses", "requests_per_s"):
+        val = st[key]
+        print(f"{key:>20}: {val:.3f}" if isinstance(val, float)
+              else f"{key:>20}: {val}")
+    print("--- registry ---")
+    for key, val in st["registry"].items():
+        if key != "names":
+            print(f"{key:>20}: {val}")
+    print("serve_sparse OK")
+
+
+if __name__ == "__main__":
+    main()

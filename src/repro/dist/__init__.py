@@ -15,6 +15,8 @@ _LAZY = {
     "SDDMMPartition": "repro.dist.partition",
     "SHARD_AXIS": "repro.dist.sparse",
     "Shard": "repro.dist.partition",
+    "ShardedSDDMM": "repro.dist.sparse",
+    "ShardedSpMM": "repro.dist.sparse",
     "SpMMPartition": "repro.dist.partition",
     "column_halo": "repro.dist.partition",
     "make_agnn_train_step": "repro.dist.gnn",

@@ -21,7 +21,12 @@ Each shard is then a self-contained Libra problem:
   matrix get different TC/VPU thresholds and tile sizes. Preprocessing
   consumes the per-shard config; the kernel-tile fields are combined
   conservatively (min across shards) into one ``run_cfg``, because a
-  ``shard_map`` body is a single program.
+  ``shard_map`` body is a single program. ``tune="search"`` keeps the
+  per-shard *thresholds* model-tuned but times candidate ``run_cfg``
+  kernel tiles through the sharded apply itself (a real mesh when one
+  is passed, otherwise a vmap-over-shards emulation of the shard_map
+  body — the identical per-device program), memoized under a
+  partition-level key in the persistent plan cache.
 * **padded stacking** — per-shard device arrays are padded to common
   shapes and stacked on a leading shard axis so ``shard_map`` can split
   them over a mesh axis. Padding is *semantically inert by
@@ -144,6 +149,117 @@ def _offset_pos(pos: np.ndarray, off: int) -> np.ndarray:
     return np.where(pos >= 0, pos + off, -1).astype(np.int32)
 
 
+# ------------------------------------------------- run_cfg search (dist) ---
+def _run_cfg_candidates(base: TuneConfig, op: str,
+                        backend: str) -> list[TuneConfig]:
+    """Candidate run_cfgs around the model-combined base (candidate #0,
+    the floor search can't lose to). Kernel-tile perturbations only
+    matter on ``"pallas"`` — the XLA reference path never reads them, so
+    its grid is the base alone (ties resolve to it)."""
+    cands = [base]
+    if backend != "pallas":
+        return cands
+    if op == "spmm":
+        for kt in (base.kt * 2, base.kt // 2):
+            if kt >= 8:
+                cands.append(base.replace(kt=kt))
+    else:
+        if base.yt is not None and base.yt // 2 >= 8:
+            cands.append(base.replace(yt=base.yt // 2))
+        if base.xt is not None and base.xt // 2 >= 8:
+            cands.append(base.replace(xt=base.xt // 2))
+    seen, out = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def _search_run_cfg(part, op: str, a: SparseCSR, *, width: int,
+                    mode: str, threshold, bk, ts_tile, backend: str,
+                    mesh, timer, cache) -> TuneConfig:
+    """Time candidate run_cfgs through the sharded apply (real mesh) or
+    its vmap-over-shards emulation (no mesh — the same per-device
+    program), memoized under a partition-level plan-cache key."""
+    from repro.tune import PlanCache, median_timer, tune_key
+
+    pc = cache if isinstance(cache, PlanCache) else PlanCache(cache)
+    key = tune_key(a, op=f"{op}#p{part.n_shards}", width=width,
+                   dtype="float32", backend=backend, mode=mode,
+                   tune="search", threshold=threshold, bk=bk,
+                   ts_tile=ts_tile)
+    hit = pc.get(key)
+    if hit is not None:
+        return hit
+    timer = timer or median_timer()
+    rng = np.random.default_rng(0)
+    if op == "spmm":
+        operands = (jnp.asarray(
+            rng.standard_normal((a.k, width)).astype(np.float32)),)
+    else:
+        operands = (
+            jnp.asarray(rng.standard_normal((a.m, width)).astype(np.float32)),
+            jnp.asarray(rng.standard_normal((a.k, width)).astype(np.float32)))
+    candidates = _run_cfg_candidates(part.run_cfg, op, backend)
+    best_i, timings = 0, {}
+    for i, cand in enumerate(candidates):
+        fn = _timed_apply(dataclasses.replace(part, run_cfg=cand), op,
+                          backend=backend, mesh=mesh)
+        timings[i] = timer(lambda: fn(*operands))
+        if timings[i] < timings[best_i]:
+            best_i = i
+    cfg = candidates[best_i].replace(source="search")
+    pc.put(key, cfg, meta={"timings_s": {str(i): t
+                                         for i, t in timings.items()},
+                           "n_shards": part.n_shards})
+    return cfg
+
+
+def _timed_apply(part, op: str, *, backend: str, mesh):
+    """Jitted sharded apply for one candidate partition: the real
+    ``shard_map`` op when a mesh is given, otherwise a ``vmap`` over the
+    stacked shard axis running the identical per-device program."""
+    import jax
+
+    if mesh is not None:
+        from repro.dist.sparse import sddmm_sharded, spmm_sharded
+
+        if op == "spmm":
+            return jax.jit(lambda b: spmm_sharded(part, b, mesh=mesh,
+                                                  backend=backend))
+        return jax.jit(lambda x, y: sddmm_sharded(part, x, y, mesh=mesh,
+                                                  backend=backend))
+    from repro.kernels.ops import sddmm_apply, spmm_apply
+
+    if op == "spmm":
+        def apply_spmm(b):
+            def body(local):
+                arrs = {k: v for k, v in local.items() if k != "halo"}
+                b_halo = jnp.take(b, local["halo"], axis=0)
+                return spmm_apply(arrs, b_halo, m=part.rows_pad,
+                                  nwin=part.wmax, backend=backend,
+                                  cfg=part.run_cfg, interpret=True)
+            out = jax.vmap(body)(part.stacked)
+            return jnp.take(out.reshape(-1, b.shape[1]),
+                            part.out_gather, axis=0)
+        return jax.jit(apply_spmm)
+
+    def apply_sddmm(x, y):
+        x_panels = jnp.take(x, part.x_take, axis=0).reshape(
+            part.n_shards, part.rows_pad, x.shape[1])
+
+        def body(local, xx):
+            arrs = {k: v for k, v in local.items() if k != "halo"}
+            y_halo = jnp.take(y, local["halo"], axis=0)
+            return sddmm_apply(arrs, xx, y_halo, nnz=part.nnz_pad,
+                               backend=backend, cfg=part.run_cfg,
+                               interpret=True)
+        out = jax.vmap(body)(part.stacked, x_panels)
+        return jnp.take(out.reshape(-1), part.nnz_gather, axis=0)
+    return jax.jit(apply_sddmm)
+
+
 # ----------------------------------------------------------- partitions ---
 @dataclasses.dataclass(frozen=True)
 class SpMMPartition:
@@ -165,18 +281,32 @@ class SpMMPartition:
 def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
                    threshold: int | None = None, tune="model",
                    bk: int | None = None, ts_tile: int | None = None,
-                   tune_n: int = 128) -> SpMMPartition:
+                   tune_n: int = 128, tune_cache=None, tune_backend="xla",
+                   mesh=None, timer=None) -> SpMMPartition:
     """Split + per-shard tune + preprocess + pad/stack for sharded SpMM.
 
-    ``tune`` accepts ``"model"``/``"off"``/a :class:`TuneConfig` (the
-    empirical ``"search"`` mode times through the single-device apply
-    and is not meaningful per shard). ``bk``/``ts_tile`` are unified
-    across shards (stacked block shapes must agree); each shard still
-    gets its own threshold and kernel tiles.
+    ``tune`` accepts ``"model"``/``"search"``/``"off"``/a
+    :class:`TuneConfig`. ``"search"`` keeps per-shard thresholds
+    model-tuned but empirically times candidate ``run_cfg`` kernel
+    tiles through the sharded apply (on ``mesh`` when given, else a
+    vmap-over-shards emulation of the same per-device program) and
+    memoizes the winner under a partition-level key in the persistent
+    plan cache (``tune_cache``); ``tune_backend`` selects the timed
+    backend (tile candidates only differ on ``"pallas"``).
+    ``bk``/``ts_tile`` are unified across shards (stacked block shapes
+    must agree); each shard still gets its own threshold and tiles.
     """
     if tune == "search":
-        raise ValueError("partition_spmm: per-shard tune='search' is not "
-                         "supported; use 'model', 'off' or a TuneConfig")
+        part = partition_spmm(a, n_shards, mode=mode, threshold=threshold,
+                              tune="model", bk=bk, ts_tile=ts_tile,
+                              tune_n=tune_n)
+        cfg = _search_run_cfg(part, "spmm", a, width=tune_n, mode=mode,
+                              threshold=threshold, bk=part.run_cfg.bk,
+                              ts_tile=part.run_cfg.ts_tile,
+                              backend=tune_backend, mesh=mesh, timer=timer,
+                              cache=tune_cache)
+        meta = {**part.meta, "run_cfg_source": cfg.source}
+        return dataclasses.replace(part, run_cfg=cfg, meta=meta)
     # One global feature pass fixes the common block geometry.
     base = tune_spmm(a, mode=mode, threshold=threshold, tune=tune,
                      n=tune_n, bk=bk, ts_tile=ts_tile)
@@ -282,12 +412,23 @@ class SDDMMPartition:
 def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
                     threshold: int | None = None, tune="model",
                     bk: int | None = None, ts_tile: int | None = None,
-                    tune_kf: int = 128) -> SDDMMPartition:
+                    tune_kf: int = 128, tune_cache=None,
+                    tune_backend="xla", mesh=None,
+                    timer=None) -> SDDMMPartition:
     """SDDMM flavour of :func:`partition_spmm` (same sharding geometry;
-    scores come back in canonical global nnz order via ``nnz_gather``)."""
+    scores come back in canonical global nnz order via ``nnz_gather``;
+    same partition-level ``tune="search"`` semantics)."""
     if tune == "search":
-        raise ValueError("partition_sddmm: per-shard tune='search' is not "
-                         "supported; use 'model', 'off' or a TuneConfig")
+        part = partition_sddmm(a, n_shards, mode=mode, threshold=threshold,
+                               tune="model", bk=bk, ts_tile=ts_tile,
+                               tune_kf=tune_kf)
+        cfg = _search_run_cfg(part, "sddmm", a, width=tune_kf, mode=mode,
+                              threshold=threshold, bk=part.run_cfg.bk,
+                              ts_tile=part.run_cfg.ts_tile,
+                              backend=tune_backend, mesh=mesh, timer=timer,
+                              cache=tune_cache)
+        meta = {**part.meta, "run_cfg_source": cfg.source}
+        return dataclasses.replace(part, run_cfg=cfg, meta=meta)
     base = tune_sddmm(a, mode=mode, threshold=threshold, tune=tune,
                       kf=tune_kf, bk=bk, ts_tile=ts_tile)
     bk_c = bk if bk is not None else (base.bk or preprocess.DEFAULT_BK_SDDMM)

@@ -49,8 +49,6 @@ Every public entry point here is traceable — it can sit under an outer
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -59,8 +57,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.spmm import LibraSpMM
 from repro.core.sddmm import LibraSDDMM
 from repro.kernels import ref
-from repro.kernels.ops import _pad_to, cached_compile, sddmm_apply, spmm_apply
-from repro.dist.partition import SDDMMPartition, SpMMPartition
+from repro.kernels.ops import (
+    _pad_to,
+    cached_compile,
+    sddmm_apply,
+    sddmm_apply_stack,
+    spmm_apply,
+    spmm_apply_stack,
+)
+from repro.dist.partition import SDDMMPartition, SpMMPartition, partition_sddmm, partition_spmm
 
 SHARD_AXIS = "shards"
 _LAYOUTS = ("replicated", "rowshard")
@@ -159,21 +164,27 @@ class BatchedSpMM:
         self._cache: dict = {}
 
     def __call__(self, b_stack: jnp.ndarray, backend: str = "xla",
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True,
+                 edge_vals: jnp.ndarray | None = None) -> jnp.ndarray:
+        """Apply the plan to every panel; ``edge_vals`` — optional
+        ``(batch, nnz)`` canonical per-panel values — revalues the plan
+        per panel (the attention-serving path)."""
         op = self.op
         assert b_stack.ndim == 3 and b_stack.shape[1] == op.k, b_stack.shape
+        has_ev = edge_vals is not None
 
-        def batched(arrs, bb):
-            one = functools.partial(spmm_apply, arrs, m=op.m, nwin=op.nwin,
+        def batched(arrs, bb, *ev):
+            return spmm_apply_stack(arrs, bb, m=op.m, nwin=op.nwin,
                                     backend=backend, cfg=op.tune_config,
-                                    interpret=interpret)
-            return jax.vmap(one)(bb)
+                                    interpret=interpret,
+                                    edge_vals=ev[0] if ev else None)
 
+        args = (op.arrays, b_stack) + ((edge_vals,) if has_ev else ())
         fn = cached_compile(
             self._cache,
-            (b_stack.shape, str(b_stack.dtype), backend, interpret),
-            lambda: jax.jit(batched).lower(op.arrays, b_stack))
-        return fn(op.arrays, b_stack)
+            (b_stack.shape, str(b_stack.dtype), backend, interpret, has_ev),
+            lambda: jax.jit(batched).lower(*args))
+        return fn(*args)
 
 
 class BatchedSDDMM:
@@ -191,10 +202,9 @@ class BatchedSDDMM:
         assert x_stack.ndim == 3 and y_stack.ndim == 3
 
         def batched(arrs, xx, yy):
-            one = functools.partial(sddmm_apply, arrs, nnz=op.nnz,
-                                    backend=backend, cfg=op.tune_config,
-                                    interpret=interpret)
-            return jax.vmap(one)(xx, yy)
+            return sddmm_apply_stack(arrs, xx, yy, nnz=op.nnz,
+                                     backend=backend, cfg=op.tune_config,
+                                     interpret=interpret)
 
         fn = cached_compile(
             self._cache,
@@ -202,3 +212,87 @@ class BatchedSDDMM:
              interpret),
             lambda: jax.jit(batched).lower(op.arrays, x_stack, y_stack))
         return fn(op.arrays, x_stack, y_stack)
+
+
+# ----------------------------------------------------------- sharded ops ---
+class ShardedSpMM:
+    """Engine-callable sharded apply: partition + mesh bound once, one
+    AOT executable per dense-operand shape.
+
+    The serving-shape counterpart of :class:`BatchedSpMM` for graphs too
+    large (or too imbalanced) for one device: the partition is the
+    amortized asset; requests arrive as ``(k, n)`` panels and run the
+    ``shard_map`` apply without re-trace/re-jit. Accepts a
+    :class:`~repro.dist.partition.SpMMPartition` or a raw
+    :class:`~repro.sparse.matrix.SparseCSR` (partitioned here);
+    ``edge_vals`` revalues the plan per call (canonical nnz order).
+    """
+
+    def __init__(self, a, mesh: Mesh, *, axis: str = SHARD_AXIS,
+                 backend: str = "xla", b_layout: str = "replicated",
+                 interpret: bool = True, **part_kwargs):
+        self.part = (a if isinstance(a, SpMMPartition)
+                     else partition_spmm(a, int(mesh.shape[axis]),
+                                         **part_kwargs))
+        assert int(mesh.shape[axis]) == self.part.n_shards
+        self.mesh, self.axis = mesh, axis
+        self.backend, self.b_layout = backend, b_layout
+        self.interpret = interpret
+        self.m, self.k, self.nnz = self.part.m, self.part.k, self.part.nnz
+        self._cache: dict = {}
+
+    @property
+    def tune_config(self):
+        return self.part.run_cfg
+
+    def __call__(self, b: jnp.ndarray,
+                 edge_vals: jnp.ndarray | None = None) -> jnp.ndarray:
+        assert b.shape[0] == self.k, (b.shape, self.k)
+        has_ev = edge_vals is not None
+
+        def fn(bb, *ev):
+            return spmm_sharded(self.part, bb, mesh=self.mesh,
+                                axis=self.axis, backend=self.backend,
+                                edge_vals=ev[0] if ev else None,
+                                b_layout=self.b_layout,
+                                interpret=self.interpret)
+
+        args = (b,) + ((edge_vals,) if has_ev else ())
+        exe = cached_compile(self._cache, (b.shape, str(b.dtype), has_ev),
+                             lambda: jax.jit(fn).lower(*args))
+        return exe(*args)
+
+
+class ShardedSDDMM:
+    """Engine-callable sharded SDDMM — see :class:`ShardedSpMM`."""
+
+    def __init__(self, a, mesh: Mesh, *, axis: str = SHARD_AXIS,
+                 backend: str = "xla", y_layout: str = "replicated",
+                 interpret: bool = True, **part_kwargs):
+        self.part = (a if isinstance(a, SDDMMPartition)
+                     else partition_sddmm(a, int(mesh.shape[axis]),
+                                          **part_kwargs))
+        assert int(mesh.shape[axis]) == self.part.n_shards
+        self.mesh, self.axis = mesh, axis
+        self.backend, self.y_layout = backend, y_layout
+        self.interpret = interpret
+        self.m, self.k, self.nnz = self.part.m, self.part.k, self.part.nnz
+        self._cache: dict = {}
+
+    @property
+    def tune_config(self):
+        return self.part.run_cfg
+
+    def __call__(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        assert x.shape[0] >= self.m and y.shape[0] >= self.k
+
+        def fn(xx, yy):
+            return sddmm_sharded(self.part, xx, yy, mesh=self.mesh,
+                                 axis=self.axis, backend=self.backend,
+                                 y_layout=self.y_layout,
+                                 interpret=self.interpret)
+
+        exe = cached_compile(self._cache,
+                             (x.shape, y.shape, str(x.dtype)),
+                             lambda: jax.jit(fn).lower(x, y))
+        return exe(x, y)

@@ -119,6 +119,43 @@ def spmm_apply(arrs, b, *, m: int, nwin: int, backend: str = "xla",
     return out[:m, :n0]
 
 
+def spmm_apply_stack(arrs, b_stack, *, m: int, nwin: int,
+                     backend: str = "xla", cfg: TuneConfig | None = None,
+                     interpret: bool = True,
+                     edge_vals: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Panel-stack hybrid SpMM: one plan over a ``(batch, k, n)`` stack.
+
+    The serving-shape primitive: a graph's plan is the amortized asset,
+    requests arrive as feature panels. ``vmap`` over the single fused
+    apply keeps per-panel results bitwise identical to looped single
+    applies (each batch element's compute graph is the single-panel
+    one), so bucketed serving can promise bit-identity with direct
+    operator calls. ``edge_vals`` — optional ``(batch, nnz)`` canonical
+    per-panel values — revalues the plan per panel inside the vmap (the
+    attention-serving path: pattern shared, values per request).
+
+    Traceable; callers AOT-compile via :func:`cached_compile` (see
+    :class:`repro.dist.sparse.BatchedSpMM` / the serve engine).
+    """
+    one = functools.partial(spmm_apply, m=m, nwin=nwin, backend=backend,
+                            cfg=cfg, interpret=interpret)
+    if edge_vals is None:
+        return jax.vmap(lambda bb: one(arrs, bb))(b_stack)
+    return jax.vmap(
+        lambda ev, bb: one(ref.revalue_spmm_arrays(arrs, ev), bb)
+    )(edge_vals, b_stack)
+
+
+def sddmm_apply_stack(arrs, x_stack, y_stack, *, nnz: int,
+                      backend: str = "xla", cfg: TuneConfig | None = None,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Panel-stack hybrid SDDMM: ``(batch, m, kf) × (batch, k, kf) →
+    (batch, nnz)`` — see :func:`spmm_apply_stack` for the contract."""
+    one = functools.partial(sddmm_apply, nnz=nnz, backend=backend,
+                            cfg=cfg, interpret=interpret)
+    return jax.vmap(lambda xx, yy: one(arrs, xx, yy))(x_stack, y_stack)
+
+
 @functools.partial(
     jax.jit, static_argnames=("nnz", "backend", "cfg", "interpret")
 )

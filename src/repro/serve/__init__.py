@@ -1,0 +1,38 @@
+"""Serving layer: LM decode batching + sparse-operator serving.
+
+Two serving stacks live here:
+
+* :mod:`repro.serve.batching` — vLLM-style continuous batching for the
+  dense LM decode path (:mod:`repro.launch.serve`);
+* :mod:`repro.serve.registry` / :mod:`repro.serve.engine` /
+  :mod:`repro.serve.gnn_service` — multi-tenant sparse-operator serving
+  over an AOT plan registry: register a graph once (tune + preprocess +
+  warm), then serve SpMM/SDDMM/GNN-forward requests through
+  panel-bucketed batched executions.
+
+Lazy exports (PEP 562) so ``import repro.serve`` stays cheap.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "AdmissionError": "repro.serve.engine",
+    "ContinuousBatcher": "repro.serve.batching",
+    "GNNService": "repro.serve.gnn_service",
+    "GraphRegistry": "repro.serve.registry",
+    "RegisteredGraph": "repro.serve.registry",
+    "Request": "repro.serve.batching",
+    "SparseEngine": "repro.serve.engine",
+    "SparseRequest": "repro.serve.engine",
+    "as_csr": "repro.serve.registry",
+    "run_to_completion": "repro.serve.batching",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

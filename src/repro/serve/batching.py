@@ -44,11 +44,21 @@ class ContinuousBatcher:
         self.queue: deque[Request] = deque()
         self.max_len = max_len
         self.finished: list[Request] = []
+        # Mean fraction of busy slots over the steps driven so far — a
+        # proper field (updated by run_to_completion), not an ad-hoc
+        # attribute that only exists after a full drain.
+        self.mean_utilization: float = 0.0
 
     # -- host-side scheduling -------------------------------------------
     def submit(self, req: Request) -> bool:
         if len(req.prompt) + req.max_new > self.max_len:
             return False  # would overflow the cache slot
+        if req.max_new == 0:
+            # Nothing to generate: complete immediately (empty output)
+            # without ever occupying a decode slot.
+            req.done = True
+            self.finished.append(req)
+            return True
         self.queue.append(req)
         return True
 
@@ -116,7 +126,9 @@ def run_to_completion(batcher: ContinuousBatcher,
     """Drive the batcher against a per-step decode function.
 
     ``step_fn(tokens, lengths) -> sampled tokens`` wraps the jitted
-    serve_step; the scheduler never sees device arrays.
+    serve_step; the scheduler never sees device arrays. The per-run mean
+    slot utilization lands in ``batcher.mean_utilization`` (0.0 when no
+    step was needed, e.g. every request had ``max_new=0``).
     """
     steps = 0
     util = []

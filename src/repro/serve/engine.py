@@ -1,0 +1,340 @@
+"""Panel-bucketed sparse-operator request engine.
+
+The serving counterpart of the training stack: requests against graphs
+resident in a :class:`~repro.serve.registry.GraphRegistry` are admitted
+host-side, bucketed by (graph, op, feature-width bucket), packed into
+panel stacks, and executed one AOT executable per bucket:
+
+* **batched graphs, SpMM** — a bucket's ``(k, n_i)`` panels are
+  width-padded to the bucket width and **column-packed** side by side
+  into one ``(k, p·w)`` panel served by a single fused apply (columns
+  of an SpMM are independent, so packing is exact). How many panels
+  pack into one apply is priced per plan by
+  :meth:`~repro.serve.registry.GraphRegistry.pack_limit` — TC-heavy
+  plans pack to the full panel bucket (wider MXU GEMMs, one dispatch),
+  VPU-heavy plans cap the pack so the residual stream's gather working
+  set stays in cache (a VPU-heavy bucket degenerates to async singles,
+  which measure faster than any wide apply on such plans). Per-request
+  canonical ``edge_vals`` (attention serving) can't column-pack —
+  values change the plan — so they ride a vmapped
+  :class:`~repro.dist.sparse.BatchedSpMM` stack instead.
+* **batched graphs, SDDMM** — the feature axis is the reduction axis
+  (nothing packs), so ``(x, y)`` pairs stack on a leading batch axis
+  through one vmapped :class:`~repro.dist.sparse.BatchedSDDMM` call.
+* **sharded graphs** — SpMM panels column-pack the same way into
+  :class:`~repro.dist.sparse.ShardedSpMM` calls (the pack cap prices
+  the *per-device* shard stream, so sharded graphs pack deeper — and
+  the packed apply additionally amortizes the per-call ``shard_map``
+  dispatch); sharded SDDMM and per-request-valued sharded SpMM run per
+  request (values change the plan, and SDDMM's feature axis is the
+  reduction axis — neither packs).
+
+Numerical contract: every bucket **computes at its bucket width**.
+Requests whose width already equals a bucket width get results bitwise
+identical to direct single-operator calls (column packing, vmap
+stacking, and batch padding are all verified inert — see
+``tests/test_serve_engine``); narrower requests are zero-padded up to
+the bucket width, which quantizes the compute width exactly the way a
+direct call on the padded panel would.
+
+Admission control is host-side and explicit: unknown graphs, missing
+operators, over-wide panels, shape mismatches, and queue overflow are
+rejected at ``submit`` with a typed :class:`AdmissionError`, never
+discovered at execution time. ``stats()`` surfaces throughput, padding
+waste, bucket occupancy, and executable/plan-cache hit counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+
+import jax.numpy as jnp
+
+from repro.serve.registry import GraphRegistry
+
+
+class AdmissionError(RuntimeError):
+    """A request the engine refuses to queue; ``reason`` is one of
+    ``queue_full | unknown_graph | op_unavailable | width_too_large |
+    bad_shape``."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"{reason}: {detail}" if detail else reason)
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class SparseRequest:
+    """One admitted request (internal queue record)."""
+
+    rid: int
+    graph: str                  # tenant name, resolved at admission
+    op: str                     # "spmm" | "sddmm"
+    width: int                  # caller's feature width (pre-padding)
+    bucket_width: int
+    payload: tuple              # (b,) for spmm; (x, y) for sddmm
+    edge_vals: jnp.ndarray | None = None
+
+
+def _pad_width(arr: jnp.ndarray, w: int) -> jnp.ndarray:
+    pad = w - arr.shape[1]
+    return arr if pad == 0 else jnp.pad(arr, ((0, 0), (0, pad)))
+
+
+class SparseEngine:
+    """Admit → bucket → pack → execute → unpad/scatter."""
+
+    def __init__(self, registry: GraphRegistry, *, max_queue: int = 256,
+                 max_panel: int | None = None):
+        self.registry = registry
+        self.max_queue = max_queue
+        self.max_panel = (max(registry.panel_buckets)
+                          if max_panel is None else max_panel)
+        self._queue: list[SparseRequest] = []
+        self._redeposited: dict[int, jnp.ndarray] = {}
+        self._next_rid = 0
+        self._stats = {
+            "submitted": 0, "served": 0, "flushes": 0,
+            "panels_executed": 0, "panel_slots": 0, "real_panels": 0,
+            "real_cells": 0, "computed_cells": 0,
+            "exec_cache_hits": 0, "exec_cache_misses": 0,
+            "serve_time_s": 0.0,
+        }
+        self._rejected: dict[str, int] = defaultdict(int)
+
+    # -------------------------------------------------------- admission ---
+    def _reject(self, reason: str, detail: str = "") -> None:
+        self._rejected[reason] += 1
+        raise AdmissionError(reason, detail)
+
+    def submit(self, graph: str, op: str, *, b=None, x=None, y=None,
+               edge_vals=None) -> int:
+        """Admit one request; returns its rid (claim the result from the
+        dict :meth:`flush` returns) or raises :class:`AdmissionError`."""
+        if len(self._queue) >= self.max_queue:
+            self._reject("queue_full", f"max_queue={self.max_queue}")
+        try:
+            entry = self.registry.resolve(graph)
+        except KeyError:
+            self._reject("unknown_graph", graph)
+        if op not in entry.ops:
+            self._reject("op_unavailable", f"{graph} has no {op!r}")
+        if op == "spmm":
+            if (getattr(b, "ndim", None) != 2
+                    or b.shape[0] != entry.k):
+                self._reject("bad_shape",
+                             f"spmm needs a 2-d array b with shape "
+                             f"({entry.k}, n)")
+            if edge_vals is not None and \
+                    getattr(edge_vals, "shape", None) != (entry.nnz,):
+                self._reject("bad_shape",
+                             f"edge_vals must have shape ({entry.nnz},)")
+            width, payload = b.shape[1], (b,)
+        elif op == "sddmm":
+            # Exact row counts: a bucket stacks its requests, so ragged
+            # row padding (which LibraSDDMM itself would tolerate) is
+            # rejected rather than silently mis-bucketed.
+            if (getattr(x, "ndim", None) != 2
+                    or getattr(y, "ndim", None) != 2
+                    or x.shape[0] != entry.m or y.shape[0] != entry.k
+                    or x.shape[1] != y.shape[1]):
+                self._reject("bad_shape",
+                             f"sddmm needs 2-d arrays x ({entry.m}, kf), "
+                             f"y ({entry.k}, kf)")
+            if edge_vals is not None:
+                self._reject("bad_shape", "sddmm takes no edge_vals")
+            width, payload = x.shape[1], (x, y)
+        else:
+            self._reject("op_unavailable", f"unknown op {op!r}")
+        wb = self.registry.width_bucket(width)
+        if wb is None:
+            self._reject("width_too_large",
+                         f"{width} > {self.registry.width_buckets[-1]}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(SparseRequest(rid, graph, op, width, wb, payload,
+                                         edge_vals))
+        self._stats["submitted"] += 1
+        return rid
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # -------------------------------------------------------- execution ---
+    def flush(self) -> dict[int, jnp.ndarray]:
+        """Serve everything queued; returns ``{rid: result}`` — plus any
+        results a cooperative intermediary :meth:`redeposit`-ed for
+        their original submitter to claim."""
+        pending, self._queue = self._queue, []
+        results, self._redeposited = self._redeposited, {}
+        if not pending:
+            return results
+        t0 = time.perf_counter()
+        buckets: dict[tuple, list[SparseRequest]] = defaultdict(list)
+        for r in pending:
+            key = (r.graph, r.op, r.bucket_width,
+                   str(r.payload[0].dtype), r.edge_vals is not None)
+            buckets[key].append(r)
+        for key in sorted(buckets, key=str):
+            reqs = buckets[key]
+            for i in range(0, len(reqs), self.max_panel):
+                self._execute(key, reqs[i:i + self.max_panel], results)
+        self._stats["flushes"] += 1
+        self._stats["served"] += len(pending)
+        self._stats["serve_time_s"] += time.perf_counter() - t0
+        return results
+
+    def serve(self, submissions) -> dict[int, jnp.ndarray]:
+        """Convenience: submit a list of ``(graph, op, kwargs)`` tuples,
+        then flush. Raises on the first inadmissible request. Results
+        of other callers' queued requests are redeposited, not lost."""
+        rids = [self.submit(g, op, **kw) for g, op, kw in submissions]
+        out = self.flush()
+        mine = {rid: out.pop(rid) for rid in rids}
+        self.redeposit(out)
+        return mine
+
+    def redeposit(self, results: dict[int, jnp.ndarray]) -> None:
+        """Hand back results claimed from :meth:`flush` that belong to
+        another submitter; the next :meth:`flush` returns them. Lets an
+        intermediary (e.g. the GNN service) drive the shared queue
+        without swallowing foreign requests' results."""
+        self._redeposited.update(results)
+
+    def _account_exec(self, fn, p: int, c: int) -> None:
+        st = self._stats
+        st["panels_executed"] += 1
+        st["panel_slots"] += p
+        st["real_panels"] += c
+
+    def _call(self, fn, cache, *args, **kw):
+        before = len(cache)
+        out = fn(*args, **kw)
+        if len(cache) > before:
+            self._stats["exec_cache_misses"] += 1
+        else:
+            self._stats["exec_cache_hits"] += 1
+        return out
+
+    def _pack_spmm(self, entry, apply_one, cache, chunk, w, results,
+                   limit) -> None:
+        """Column-pack ``chunk`` into ``(k, p·w)`` applies, at most
+        ``limit`` panels per apply (sub-chunks and the trailing batch
+        pad stay on the panel-bucket grid for executable reuse)."""
+        reg = self.registry
+        st = self._stats
+        for i in range(0, len(chunk), limit):
+            sub = chunk[i:i + limit]
+            cs = len(sub)
+            p = min(reg.panel_bucket(cs), limit)
+            parts = [_pad_width(r.payload[0], w) for r in sub]
+            if p > cs:
+                parts.append(jnp.zeros((entry.k, (p - cs) * w),
+                                       parts[0].dtype))
+            wide = parts[0] if len(parts) == 1 else jnp.concatenate(
+                parts, axis=1)
+            out = self._call(apply_one, cache, wide)
+            for j, r in enumerate(sub):
+                results[r.rid] = out[:, j * w:j * w + r.width]
+            self._account_exec(apply_one, p, cs)
+            st["computed_cells"] += p * entry.k * w
+
+    def _execute(self, key, chunk, results) -> None:
+        graph, op, w, _dtype, has_ev = key
+        entry = self.registry.get(graph)       # LRU touch per execution
+        fn = entry.op(op)
+        reg = self.registry
+        c = len(chunk)
+        st = self._stats
+        if op == "spmm":
+            for r in chunk:
+                st["real_cells"] += entry.k * r.width
+            if entry.sharded and has_ev:
+                # Values change the plan per request: no packing.
+                for r in chunk:
+                    out = self._call(fn, fn._cache,
+                                     _pad_width(r.payload[0], w),
+                                     edge_vals=r.edge_vals)
+                    results[r.rid] = out[:, :r.width]
+                    self._account_exec(fn, 1, 1)
+                    st["computed_cells"] += entry.k * w
+                return
+            if entry.sharded:
+                self._pack_spmm(entry, fn, fn._cache, chunk, w, results,
+                                reg.pack_limit(entry, w))
+                return
+            if has_ev:
+                # Revalued panels ride a vmapped stack (plan values
+                # differ per panel — column-packing can't express that).
+                p = reg.panel_bucket(c)
+                stack = jnp.stack([_pad_width(r.payload[0], w)
+                                   for r in chunk])
+                ev = jnp.stack([r.edge_vals for r in chunk])
+                if p > c:
+                    stack = jnp.concatenate(
+                        [stack, jnp.zeros((p - c,) + stack.shape[1:],
+                                          stack.dtype)])
+                    ev = jnp.concatenate(
+                        [ev, jnp.zeros((p - c, entry.nnz), ev.dtype)])
+                out = self._call(fn, fn._cache, stack, backend=reg.backend,
+                                 interpret=reg.interpret, edge_vals=ev)
+                for i, r in enumerate(chunk):
+                    results[r.rid] = out[i, :, :r.width]
+                self._account_exec(fn, p, c)
+                st["computed_cells"] += p * entry.k * w
+                return
+            # Plain panels: cost-aware column packing through the
+            # single fused apply (one executable per packed width).
+            single = fn.op
+
+            def apply_one(b):
+                return single(b, backend=reg.backend,
+                              interpret=reg.interpret)
+
+            self._pack_spmm(entry, apply_one, single._apply_cache, chunk,
+                            w, results, reg.pack_limit(entry, w))
+            return
+        # ---- sddmm ----
+        for r in chunk:
+            st["real_cells"] += (entry.m + entry.k) * r.width
+        if entry.sharded:
+            # kf is the reduction axis — no packing across requests.
+            for r in chunk:
+                out = self._call(fn, fn._cache,
+                                 _pad_width(r.payload[0], w),
+                                 _pad_width(r.payload[1], w))
+                results[r.rid] = out
+                self._account_exec(fn, 1, 1)
+                st["computed_cells"] += (entry.m + entry.k) * w
+            return
+        p = reg.panel_bucket(c)
+        xs = jnp.stack([_pad_width(r.payload[0], w) for r in chunk])
+        ys = jnp.stack([_pad_width(r.payload[1], w) for r in chunk])
+        if p > c:
+            xs = jnp.concatenate(
+                [xs, jnp.zeros((p - c,) + xs.shape[1:], xs.dtype)])
+            ys = jnp.concatenate(
+                [ys, jnp.zeros((p - c,) + ys.shape[1:], ys.dtype)])
+        out = self._call(fn, fn._cache, xs, ys, backend=reg.backend,
+                         interpret=reg.interpret)
+        for i, r in enumerate(chunk):
+            results[r.rid] = out[i]
+        self._account_exec(fn, p, c)
+        st["computed_cells"] += p * (entry.m + entry.k) * w
+
+    # ------------------------------------------------------------ stats ---
+    def stats(self) -> dict:
+        st = dict(self._stats)
+        served, t = st["served"], st["serve_time_s"]
+        return {
+            **st,
+            "rejected": dict(self._rejected),
+            "queue_depth": len(self._queue),
+            "bucket_occupancy": st["real_panels"] / max(st["panel_slots"], 1),
+            "padding_waste": 1.0 - st["real_cells"]
+            / max(st["computed_cells"], 1),
+            "requests_per_s": served / t if t > 0 else float("nan"),
+            "registry": self.registry.stats(),
+        }

@@ -1,0 +1,173 @@
+"""GNN inference serving: trained models scored through the engine.
+
+Registers a trained GCN or AGNN (params + graph) and serves
+node-scoring requests end-to-end through the panel-bucketed
+:class:`~repro.serve.engine.SparseEngine` — every sparse operation in
+the forward pass (feature-aggregation SpMM, attention SDDMM) is
+admitted as an engine request, so concurrent scoring requests against
+the same model (or different models sharing a graph) batch into shared
+panel executions layer by layer.
+
+* **GCN** — the symmetric-normalized adjacency values are baked into
+  the registered plan (:func:`repro.serve.registry.as_csr`), so each
+  layer is one engine SpMM of ``H @ W``.
+* **AGNN** — each layer runs an engine SDDMM for the attention scores,
+  a host-side edge softmax, then an engine SpMM carrying the attention
+  weights as per-request ``edge_vals`` (the revalue path — the plan's
+  pattern is the shared asset, the values arrive with the request).
+
+The dense per-layer projections (``h @ W``) are plain jnp matmuls — the
+sparse operators are the scarce, plan-bound resource the engine
+amortizes; dense GEMM needs no bucketing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import SparseEngine
+from repro.serve.registry import as_csr
+from repro.sparse.matrix import SparseCSR
+
+
+@dataclasses.dataclass
+class _Model:
+    kind: str                   # "gcn" | "agnn"
+    graph: str                  # registry name of the serving graph
+    params: list
+    m: int
+    edge_row: jnp.ndarray | None = None   # AGNN softmax segments
+
+
+@dataclasses.dataclass
+class _Scoring:
+    rid: int
+    model: str
+    h: jnp.ndarray
+    node_ids: np.ndarray | None
+
+
+class GNNService:
+    """Model registry + layer-wise scoring scheduler over one engine."""
+
+    def __init__(self, engine: SparseEngine):
+        self.engine = engine
+        self._models: dict[str, _Model] = {}
+        self._pending: list[_Scoring] = []
+        self._next_rid = 0
+
+    # -------------------------------------------------------- register ---
+    def register_gcn(self, name: str, a: SparseCSR, params, *,
+                     norm_edge_vals: np.ndarray | None = None,
+                     mesh=None) -> str:
+        """Register a trained GCN. ``norm_edge_vals`` defaults to the
+        symmetric normalization D^-1/2 A D^-1/2; ``mesh`` serves the
+        aggregation through the sharded apply."""
+        from repro.models.gnn import gcn_norm_edges
+
+        ev = (gcn_norm_edges(a) if norm_edge_vals is None
+              else np.asarray(norm_edge_vals, np.float32))
+        graph = self.engine.registry.register(
+            as_csr(a, ev), name=f"{name}::graph", ops=("spmm",), mesh=mesh)
+        self._models[name] = _Model("gcn", graph, list(params), a.m)
+        return name
+
+    def register_agnn(self, name: str, a: SparseCSR, params) -> str:
+        """Register a trained AGNN; attention runs through engine SDDMM
+        + per-request ``edge_vals`` SpMM (batched graphs only — sharded
+        per-request-valued applies don't pack)."""
+        graph = self.engine.registry.register(
+            a, name=f"{name}::graph", ops=("spmm", "sddmm"))
+        rows, _, _ = a.to_coo()
+        self._models[name] = _Model("agnn", graph, list(params), a.m,
+                                    edge_row=jnp.asarray(rows, jnp.int32))
+        return name
+
+    # ----------------------------------------------------------- score ---
+    def submit(self, model: str, feats, node_ids=None) -> int:
+        """Admit one node-scoring request (forward over ``feats``,
+        scores returned for ``node_ids`` — all nodes when None)."""
+        if model not in self._models:
+            raise KeyError(f"unknown model {model!r}")
+        m = self._models[model]
+        feats = jnp.asarray(feats)
+        assert feats.ndim == 2 and feats.shape[0] == m.m, feats.shape
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(_Scoring(
+            rid, model, feats,
+            None if node_ids is None else np.asarray(node_ids)))
+        return rid
+
+    def _flush_engine(self, tickets: dict) -> dict:
+        """Flush the shared engine, keeping only this service's tickets
+        and redepositing any foreign submitters' results."""
+        out = self.engine.flush()
+        mine = {t: out.pop(t) for t in tickets.values() if t in out}
+        self.engine.redeposit(out)
+        return mine
+
+    def flush(self) -> dict[int, jnp.ndarray]:
+        """Run all pending scoring requests layer-by-layer; each layer
+        is one engine flush (two for AGNN: SDDMM, then valued SpMM), so
+        requests share panel executions — foreign requests queued on
+        the shared engine are served too, their results redeposited for
+        their submitters."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return {}
+        depth = max(len(self._models[s.model].params) for s in pending)
+        for layer in range(depth):
+            live = [s for s in pending
+                    if layer < len(self._models[s.model].params)]
+            gcn = [s for s in live
+                   if self._models[s.model].kind == "gcn"]
+            agnn = [s for s in live
+                    if self._models[s.model].kind == "agnn"]
+            tickets = {}
+            att = {}
+            if agnn:   # attention round first: SDDMM on normalized h
+                from repro.models.gnn import edge_softmax
+
+                for s in agnn:
+                    mdl = self._models[s.model]
+                    hn = s.h / jnp.maximum(
+                        jnp.linalg.norm(s.h, axis=-1, keepdims=True), 1e-9)
+                    tickets[s.rid] = self.engine.submit(
+                        mdl.graph, "sddmm", x=hn, y=hn)
+                out = self._flush_engine(tickets)
+                for s in agnn:
+                    mdl = self._models[s.model]
+                    lp = mdl.params[layer]
+                    scores = out[tickets[s.rid]] * lp["beta"]
+                    # duck-typed on (edge_row, m) — the same softmax the
+                    # training path uses
+                    att[s.rid] = edge_softmax(mdl, scores)
+            tickets = {}
+            for s in gcn:
+                mdl = self._models[s.model]
+                tickets[s.rid] = self.engine.submit(
+                    mdl.graph, "spmm", b=s.h @ mdl.params[layer]["w"])
+            for s in agnn:
+                mdl = self._models[s.model]
+                tickets[s.rid] = self.engine.submit(
+                    mdl.graph, "spmm", b=s.h, edge_vals=att[s.rid])
+            out = self._flush_engine(tickets)
+            for s in live:
+                mdl = self._models[s.model]
+                h = out[tickets[s.rid]]
+                if mdl.kind == "agnn":
+                    h = h @ mdl.params[layer]["w"]
+                if layer < len(mdl.params) - 1:
+                    h = jax.nn.relu(h)
+                s.h = h
+        return {s.rid: (s.h if s.node_ids is None else s.h[s.node_ids])
+                for s in pending}
+
+    def score(self, model: str, feats, node_ids=None) -> jnp.ndarray:
+        """Single-request convenience: submit + flush."""
+        rid = self.submit(model, feats, node_ids)
+        return self.flush()[rid]

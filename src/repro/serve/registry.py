@@ -1,0 +1,335 @@
+"""Multi-tenant graph/operator registry: the serving plan store.
+
+Libra's preprocessing + autotuning is a per-matrix, amortizable cost —
+exactly the shape that wins in a serving setting where one tuned plan
+answers thousands of feature-panel requests. The registry owns that
+amortized state:
+
+* **register once** — a :class:`~repro.sparse.matrix.SparseCSR` is
+  registered under a tenant-chosen name; construction runs
+  :mod:`repro.tune` (threshold + tile selection, optionally through the
+  persistent plan cache) and preprocessing, and builds the panel-stack
+  operators (:class:`~repro.dist.sparse.BatchedSpMM` /
+  :class:`~repro.dist.sparse.BatchedSDDMM`, or the sharded
+  :class:`~repro.dist.sparse.ShardedSpMM` /
+  :class:`~repro.dist.sparse.ShardedSDDMM` when a mesh is given).
+* **content-addressed + multi-tenant** — entries are keyed by the
+  sparsity signature (:func:`repro.tune.cache.matrix_signature`) plus
+  mode/layout, so two tenants registering the same pattern share one
+  plan (the second registration is a reuse hit, not a rebuild). Any
+  number of names may alias one entry.
+* **LRU cap** — at most ``max_graphs`` entries stay resident; the
+  least-recently-*served* entry is evicted (its AOT executables and
+  plan arrays are dropped; the persistent tune cache keeps re-tuning
+  cheap on re-registration).
+* **AOT warmup** — :meth:`warm` compiles one executable per
+  (op, feature-width bucket, panel-size bucket, dtype, backend) ahead
+  of traffic, so the first request of each bucket shape doesn't pay
+  compile latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.matrix import SparseCSR
+from repro.tune.cache import matrix_signature
+
+
+def graph_key(a: SparseCSR, mode: str, layout: str) -> str:
+    """Registry content key: sparsity signature **plus a value digest**.
+
+    Plan *selection* is pattern-only (:func:`matrix_signature`), but a
+    registered plan bakes the value vector in — two graphs with one
+    pattern and different values (e.g. a GCN's normalized adjacency vs
+    the raw graph) must not share an entry.
+    """
+    vals = hashlib.blake2b(np.ascontiguousarray(a.data).tobytes(),
+                           digest_size=8).hexdigest()
+    return f"{matrix_signature(a)}:{vals}:{mode}:{layout}"
+
+DEFAULT_WIDTH_BUCKETS = (32, 64, 128)
+DEFAULT_PANEL_BUCKETS = (1, 2, 4, 8)
+
+# Column-packing budget for the VPU stream's gather working set
+# (ntiles · ts · packed-width · 4B). Packing a bucket into one wide
+# apply amortizes dispatch and widens the MXU GEMMs, but the VPU
+# residual path materializes a gather tensor that scales with the
+# packed width — once it spills cache, a wide apply loses to singles
+# (measured: a VPU-heavy power-law graph serves 8×64-wide panels ~4x
+# faster as singles than as one 512-wide apply, while a banded TC-heavy
+# graph is ~1.4x faster packed). The 2D-aware split priced per matrix
+# at plan time prices the batching policy too.
+PACK_BUDGET_BYTES = 2 * 2**20
+
+
+@dataclasses.dataclass
+class RegisteredGraph:
+    """One resident graph: its operators and serving metadata."""
+
+    key: str
+    names: set[str]
+    m: int
+    k: int
+    nnz: int
+    mode: str
+    sharded: bool
+    ops: dict[str, object]          # "spmm"/"sddmm" → Batched*/Sharded* op
+    spmm_vpu_elems: int = 0         # VPU-stream elements of the SpMM plan
+    plan_cache_hits: int = 0        # tune configs served from PlanCache
+    warmed: int = 0                 # executables compiled by warm()
+
+    def op(self, kind: str):
+        try:
+            return self.ops[kind]
+        except KeyError:
+            raise KeyError(f"graph {sorted(self.names)} has no "
+                           f"{kind!r} operator") from None
+
+
+class GraphRegistry:
+    """LRU-capped, signature-keyed store of ready-to-serve operators."""
+
+    def __init__(self, max_graphs: int = 8, *,
+                 width_buckets=DEFAULT_WIDTH_BUCKETS,
+                 panel_buckets=DEFAULT_PANEL_BUCKETS,
+                 backend: str = "xla", interpret: bool = True,
+                 tune="model", tune_cache=None):
+        assert max_graphs >= 1
+        self.max_graphs = max_graphs
+        self.width_buckets = tuple(sorted(width_buckets))
+        self.panel_buckets = tuple(sorted(panel_buckets))
+        self.backend = backend
+        self.interpret = interpret
+        self.tune = tune
+        self.tune_cache = tune_cache
+        self._entries: OrderedDict[str, RegisteredGraph] = OrderedDict()
+        self._names: dict[str, str] = {}
+        self._reuse_hits = 0
+        self._evictions = 0
+        self._registered_total = 0
+
+    # ------------------------------------------------------------ admit ---
+    def register(self, a: SparseCSR, *, name: str | None = None,
+                 ops=("spmm", "sddmm"), mode: str = "hybrid",
+                 mesh=None, b_layout: str = "replicated",
+                 tune=None, warm_widths=(), **op_kwargs) -> str:
+        """Register a sparse matrix; returns the (possibly generated)
+        tenant name. Re-registering an identical pattern (same mode and
+        layout) aliases the existing entry instead of rebuilding.
+
+        ``mesh`` switches the entry to window-sharded execution
+        (:class:`~repro.dist.sparse.ShardedSpMM`); ``warm_widths``
+        AOT-compiles those width buckets across all panel buckets right
+        away (see :meth:`warm`).
+        """
+        tune = self.tune if tune is None else tune
+        layout = "sharded" if mesh is not None else "batched"
+        key = graph_key(a, mode, layout)
+        name = name if name is not None else f"g-{key[:10]}"
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            # A name may have been rebound elsewhere since: re-point it.
+            old_key = self._names.get(name)
+            if old_key is not None and old_key != key:
+                other = self._entries.get(old_key)
+                if other is not None:
+                    other.names.discard(name)
+            entry.names.add(name)
+            self._names[name] = key
+            self._reuse_hits += 1
+            missing = [kind for kind in ops if kind not in entry.ops]
+            if missing:   # alias asked for more operators: top up in place
+                built, hits = self._build(a, missing, mode=mode, mesh=mesh,
+                                          b_layout=b_layout, tune=tune,
+                                          op_kwargs=op_kwargs)
+                entry.ops.update(built)
+                entry.plan_cache_hits += hits
+            for w in warm_widths:    # aliases may warm new buckets too
+                for kind in entry.ops:
+                    self.warm(name, kind, widths=(w,))
+            return name
+
+        built, hits = self._build(a, ops, mode=mode, mesh=mesh,
+                                  b_layout=b_layout, tune=tune,
+                                  op_kwargs=op_kwargs)
+        if not built:
+            raise ValueError(f"no operators requested: ops={ops!r}")
+
+        vpu_elems = 0
+        if "spmm" in built:
+            if mesh is None:
+                vpu = built["spmm"].op.plan.vpu
+                vpu_elems = int(vpu.ntiles) * int(vpu.vals.shape[-1])
+            else:
+                # Sharded: the cache-resident stream is per device.
+                vv = built["spmm"].part.stacked["vpu_vals"]
+                vpu_elems = int(vv.shape[1]) * int(vv.shape[2])
+        entry = RegisteredGraph(key=key, names={name}, m=a.m, k=a.k,
+                                nnz=a.nnz, mode=mode,
+                                sharded=mesh is not None, ops=built,
+                                spmm_vpu_elems=vpu_elems,
+                                plan_cache_hits=hits)
+        self._entries[key] = entry
+        old_key = self._names.get(name)
+        if old_key is not None:        # name rebound to a new graph
+            other = self._entries.get(old_key)
+            if other is not None:
+                other.names.discard(name)
+        self._names[name] = key
+        self._registered_total += 1
+        while len(self._entries) > self.max_graphs:
+            old_key, old = self._entries.popitem(last=False)
+            for alias in old.names:
+                # Only unbind aliases still pointing at the evicted
+                # entry — a rebound name belongs to a resident graph.
+                if self._names.get(alias) == old_key:
+                    self._names.pop(alias)
+            self._evictions += 1
+        for w in warm_widths:
+            for kind in built:
+                self.warm(name, kind, widths=(w,))
+        return name
+
+    def _build(self, a: SparseCSR, kinds, *, mode, mesh, b_layout, tune,
+               op_kwargs) -> tuple[dict[str, object], int]:
+        from repro.dist.sparse import (BatchedSDDMM, BatchedSpMM,
+                                       ShardedSDDMM, ShardedSpMM)
+
+        built: dict[str, object] = {}
+        hits = 0
+        for kind in kinds:
+            if mesh is None:
+                cls = BatchedSpMM if kind == "spmm" else BatchedSDDMM
+                op = cls(a, mode=mode, tune=tune,
+                         tune_cache=self.tune_cache, **op_kwargs)
+                hits += op.op.tune_config.source == "cache"
+            elif kind == "spmm":
+                op = ShardedSpMM(a, mesh, backend=self.backend,
+                                 b_layout=b_layout, interpret=self.interpret,
+                                 mode=mode, tune=tune,
+                                 tune_cache=self.tune_cache, **op_kwargs)
+                hits += op.tune_config.source == "cache"
+            else:
+                op = ShardedSDDMM(a, mesh, backend=self.backend,
+                                  y_layout=b_layout,
+                                  interpret=self.interpret,
+                                  mode=mode, tune=tune,
+                                  tune_cache=self.tune_cache, **op_kwargs)
+                hits += op.tune_config.source == "cache"
+            built[kind] = op
+        return built, hits
+
+    # ------------------------------------------------------------ serve ---
+    def resolve(self, name: str) -> RegisteredGraph:
+        """Entry lookup without an LRU touch (admission-control path).
+        Raises ``KeyError`` for unknown / evicted names."""
+        return self._entries[self._names[name]]
+
+    def get(self, name: str) -> RegisteredGraph:
+        """Entry lookup, counted as a use (moves the entry to the LRU
+        front)."""
+        key = self._names[name]
+        self._entries.move_to_end(key)
+        return self._entries[key]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._names
+
+    def warm(self, name: str, op: str = "spmm", *, widths=None,
+             panels=None, dtype=jnp.float32) -> int:
+        """AOT-compile (and cache) the executables the engine will run
+        for each (width bucket, panel bucket); returns how many were
+        compiled. SpMM panel buckets ride the column axis (the engine
+        packs a bucket's panels side by side into one ``(k, p·w)``
+        apply, capped by :meth:`pack_limit`); SDDMM panel buckets are
+        vmapped ``(p, rows, w)`` stacks."""
+        entry = self.get(name)
+        fn = entry.op(op)
+        compiled = 0
+        for w in (widths if widths is not None else self.width_buckets):
+            for p in (panels if panels is not None else self.panel_buckets):
+                if op == "spmm":
+                    if p > self.pack_limit(entry, w):
+                        continue   # the engine will never run this shape
+                    apply_one = fn if entry.sharded else (
+                        lambda b: fn.op(b, backend=self.backend,
+                                        interpret=self.interpret))
+                    cache = fn._cache if entry.sharded else \
+                        fn.op._apply_cache
+                    before = len(cache)
+                    apply_one(jnp.zeros((entry.k, p * w), dtype))
+                elif entry.sharded:
+                    if p > 1:
+                        continue   # sharded SDDMM serves per request
+                    cache = fn._cache
+                    before = len(cache)
+                    fn(jnp.zeros((entry.m, w), dtype),
+                       jnp.zeros((entry.k, w), dtype))
+                else:
+                    cache = fn._cache
+                    before = len(cache)
+                    fn(jnp.zeros((p, entry.m, w), dtype),
+                       jnp.zeros((p, entry.k, w), dtype),
+                       backend=self.backend, interpret=self.interpret)
+                compiled += len(cache) > before
+        entry.warmed += compiled
+        return compiled
+
+    # ------------------------------------------------------------ stats ---
+    def width_bucket(self, width: int) -> int | None:
+        """Smallest width bucket holding ``width`` (None = too wide)."""
+        for w in self.width_buckets:
+            if width <= w:
+                return w
+        return None
+
+    def panel_bucket(self, count: int) -> int:
+        """Smallest panel bucket holding ``count`` panels."""
+        for p in self.panel_buckets:
+            if count <= p:
+                return p
+        return self.panel_buckets[-1]
+
+    def pack_limit(self, entry: RegisteredGraph, width: int) -> int:
+        """Largest panel bucket whose column-packed SpMM apply keeps the
+        plan's VPU gather working set inside :data:`PACK_BUDGET_BYTES`
+        (1 ⇒ serve panels singly). For sharded entries the resident
+        stream is the per-device shard's slice, so they pack deeper."""
+        top = self.panel_buckets[-1]
+        if entry.spmm_vpu_elems == 0:
+            return top
+        fit = PACK_BUDGET_BYTES // (entry.spmm_vpu_elems * width * 4)
+        best = 1
+        for p in self.panel_buckets:
+            if p <= fit:
+                best = max(best, p)
+        return min(best, top)
+
+    def stats(self) -> dict:
+        return {
+            "graphs_resident": len(self._entries),
+            "registered_total": self._registered_total,
+            "reuse_hits": self._reuse_hits,
+            "evictions": self._evictions,
+            "plan_cache_hits": sum(e.plan_cache_hits
+                                   for e in self._entries.values()),
+            "warmed_executables": sum(e.warmed
+                                      for e in self._entries.values()),
+            "names": {n: self._entries[k].key[:10]
+                      for n, k in sorted(self._names.items())},
+        }
+
+
+def as_csr(a, values: np.ndarray | None = None) -> SparseCSR:
+    """Clone a CSR, optionally swapping its values (pattern untouched) —
+    the hook for registering value-parameterized graphs (e.g. a GCN's
+    normalized adjacency) without mutating the caller's matrix."""
+    data = a.data if values is None else np.asarray(values, np.float32)
+    assert data.shape == a.data.shape
+    return SparseCSR(a.m, a.k, a.indptr, a.indices, data)

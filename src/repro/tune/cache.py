@@ -13,7 +13,15 @@ as one JSON file per key under a configurable directory:
   mode, any explicit threshold override, tuner version);
 * writes are atomic (``os.replace`` of a temp file) so concurrent
   processes never observe a torn entry; unreadable/corrupt entries are
-  treated as misses.
+  treated as misses;
+* the store is **LRU-capped** (``max_entries``, default
+  :data:`DEFAULT_MAX_ENTRIES`, overridable via
+  ``$REPRO_TUNE_CACHE_MAX``): every hit refreshes the entry's mtime and
+  every write evicts the stalest entries beyond the cap, so the on-disk
+  footprint is bounded no matter how many distinct matrices a serving
+  process churns through. Eviction tolerates concurrent writers —
+  losing a race to unlink (or to replace) a file is treated as
+  already-done, never an error.
 
 Bumping :data:`CACHE_VERSION` invalidates every entry (the version is
 hashed into the key), which is how model/search changes roll out without
@@ -32,6 +40,13 @@ from repro.tune.model import TuneConfig
 
 CACHE_VERSION = 2  # v2: TuneConfig gained xt (SDDMM X-row panel streaming)
 _ENV_VAR = "REPRO_TUNE_CACHE_DIR"
+_ENV_MAX = "REPRO_TUNE_CACHE_MAX"
+DEFAULT_MAX_ENTRIES = 512
+
+
+def default_max_entries() -> int:
+    env = os.environ.get(_ENV_MAX)
+    return int(env) if env else DEFAULT_MAX_ENTRIES
 
 
 def default_cache_dir() -> str:
@@ -66,17 +81,22 @@ def tune_key(a: SparseCSR, *, op: str, width: int, dtype: str,
 
 
 class PlanCache:
-    """File-per-key JSON store for tuned configs."""
+    """File-per-key JSON store for tuned configs, LRU-capped."""
 
-    def __init__(self, root: str | None = None):
+    def __init__(self, root: str | None = None,
+                 max_entries: int | None = None):
         self.root = root or default_cache_dir()
+        self.max_entries = (default_max_entries() if max_entries is None
+                            else max_entries)
+        assert self.max_entries >= 1
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, f"{key}.json")
 
     def get(self, key: str) -> TuneConfig | None:
+        path = self._path(key)
         try:
-            with open(self._path(key)) as f:
+            with open(path) as f:
                 doc = json.load(f)
         except (OSError, ValueError):
             return None
@@ -84,9 +104,14 @@ class PlanCache:
             return None
         cfg = doc.get("config")
         try:
-            return TuneConfig(**cfg).replace(source="cache")
+            out = TuneConfig(**cfg).replace(source="cache")
         except TypeError:
             return None  # field drift ⇒ treat as miss
+        try:
+            os.utime(path)  # LRU touch: a hit is a use
+        except OSError:
+            pass  # concurrently evicted — the parsed doc is still good
+        return out
 
     def put(self, key: str, cfg: TuneConfig, meta: dict | None = None) -> str:
         os.makedirs(self.root, exist_ok=True)
@@ -107,4 +132,39 @@ class PlanCache:
             except OSError:
                 pass
             raise
+        self._evict()
         return self._path(key)
+
+    def size(self) -> int:
+        """Number of resident entries."""
+        try:
+            return sum(n.endswith(".json") for n in os.listdir(self.root))
+        except OSError:
+            return 0
+
+    def _evict(self) -> None:
+        """Drop least-recently-used entries beyond ``max_entries``.
+
+        mtime is the recency signal (``get`` touches it). Races with
+        concurrent writers are benign: a vanished file mid-scan or
+        mid-unlink means someone else evicted it first.
+        """
+        try:
+            names = [n for n in os.listdir(self.root) if n.endswith(".json")]
+        except OSError:
+            return
+        over = len(names) - self.max_entries
+        if over <= 0:
+            return
+        aged = []
+        for n in names:
+            try:
+                aged.append((os.path.getmtime(os.path.join(self.root, n)), n))
+            except OSError:
+                pass  # concurrently removed
+        aged.sort()
+        for _, n in aged[:over]:
+            try:
+                os.unlink(os.path.join(self.root, n))
+            except OSError:
+                pass

@@ -1,0 +1,366 @@
+"""Sparse-operator serving subsystem (`repro.serve` registry/engine/GNN).
+
+The load-bearing claims:
+
+* bucket packing is a bijection — unpad∘pad = id, every admitted rid
+  gets exactly one result of the caller's shape;
+* engine results are **bit-identical** to direct operator calls (both
+  backends) for bucket-width requests, and bit-identical to direct
+  calls on width-padded operands otherwise;
+* the registry is content-addressed (multi-tenant aliasing), LRU-capped,
+  and re-registration after eviction works;
+* admission control rejects bad traffic at submit time with typed
+  reasons, and the engine never sees it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sddmm import LibraSDDMM
+from repro.core.spmm import LibraSpMM
+from repro.serve import (
+    AdmissionError,
+    GNNService,
+    GraphRegistry,
+    SparseEngine,
+    as_csr,
+)
+from repro.sparse.generate import mixed_csr, power_law_csr
+
+
+def _f32(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ------------------------------------------------------------- registry ---
+def test_registry_content_addressing_and_aliases():
+    a = mixed_csr(96, 80, seed=1)
+    reg = GraphRegistry(max_graphs=4)
+    n1 = reg.register(a, name="tenantA/g")
+    n2 = reg.register(a, name="tenantB/g")          # same pattern+values
+    assert reg.resolve(n1) is reg.resolve(n2)
+    assert reg.stats()["reuse_hits"] == 1
+    assert reg.stats()["registered_total"] == 1
+    # same pattern, different values ⇒ its own entry (values are baked)
+    a2 = as_csr(a, np.asarray(a.data) * 2.0)
+    n3 = reg.register(a2, name="tenantC/g")
+    assert reg.resolve(n3) is not reg.resolve(n1)
+    # an alias asking for an op the entry lacks tops the entry up
+    reg2 = GraphRegistry(max_graphs=4)
+    reg2.register(a, name="spmm-only", ops=("spmm",))
+    assert "sddmm" not in reg2.resolve("spmm-only").ops
+    reg2.register(a, name="both", ops=("spmm", "sddmm"))
+    assert "sddmm" in reg2.resolve("spmm-only").ops
+
+
+def test_registry_lru_eviction_and_reregistration(rng):
+    mats = [power_law_csr(64 + 8 * i, 64, 4.0, seed=i) for i in range(4)]
+    reg = GraphRegistry(max_graphs=2)
+    eng = SparseEngine(reg)
+    for i, a in enumerate(mats[:2]):
+        reg.register(a, name=f"g{i}", ops=("spmm",))
+    # touch g0 through a served request: g1 becomes the LRU victim
+    out = eng.serve([("g0", "spmm", {"b": _f32(rng, mats[0].k, 32)})])
+    assert len(out) == 1
+    reg.register(mats[2], name="g2", ops=("spmm",))
+    assert "g0" in reg and "g2" in reg and "g1" not in reg
+    assert reg.stats()["evictions"] == 1
+    with pytest.raises(AdmissionError) as ei:
+        eng.submit("g1", "spmm", b=_f32(rng, mats[1].k, 32))
+    assert ei.value.reason == "unknown_graph"
+    # re-registration after eviction rebuilds and serves again
+    reg.register(mats[1], name="g1", ops=("spmm",))
+    got = eng.serve([("g1", "spmm", {"b": _f32(rng, mats[1].k, 32)})])
+    assert next(iter(got.values())).shape == (mats[1].m, 32)
+    assert reg.stats()["evictions"] == 2  # g0 or g2 paid for g1's return
+
+
+def test_registry_rebound_name_survives_eviction(rng):
+    """A name rebound to a new graph must stay resolvable when the
+    graph it previously named is evicted."""
+    mats = [power_law_csr(64 + 8 * i, 64, 4.0, seed=i) for i in range(3)]
+    reg = GraphRegistry(max_graphs=2)
+    reg.register(mats[0], name="g", ops=("spmm",))
+    reg.register(mats[1], name="g", ops=("spmm",))   # rebind same name
+    assert reg.resolve("g").k == mats[1].k
+    reg.register(mats[2], name="h", ops=("spmm",))   # evicts mats[0]
+    assert reg.stats()["evictions"] == 1
+    assert "g" in reg and reg.resolve("g").k == mats[1].k
+
+
+def test_registry_alias_registration_warms(rng):
+    a = mixed_csr(80, 64, seed=2)
+    reg = GraphRegistry(max_graphs=2, width_buckets=(16, 32),
+                        panel_buckets=(1,))
+    reg.register(a, name="first", ops=("spmm",))
+    assert reg.stats()["warmed_executables"] == 0
+    # an alias of the same graph may request warmup
+    reg.register(a, name="second", ops=("spmm",), warm_widths=(16,))
+    assert reg.stats()["warmed_executables"] == 1
+
+
+def test_foreign_results_survive_intermediary_flush(rng):
+    """A request queued by one caller survives another caller draining
+    the shared engine (serve()/GNNService redeposit foreign results)."""
+    from repro.models import gnn as mgnn
+
+    a = mixed_csr(96, 96, seed=23)
+    reg = GraphRegistry(max_graphs=4)
+    eng = SparseEngine(reg)
+    reg.register(a, name="direct", ops=("spmm",))
+    b = _f32(rng, a.k, 32)
+    rid = eng.submit("direct", "spmm", b=b)        # tenant queues...
+    svc = GNNService(eng)
+    params = mgnn.init_gcn(jax.random.PRNGKey(0), [16, 8])
+    svc.register_gcn("gcn", a, params)
+    svc.score("gcn", _f32(rng, a.m, 16))           # ...service drains
+    out = eng.flush()                              # tenant still served
+    assert np.array_equal(np.asarray(out[rid]),
+                          np.asarray(LibraSpMM(a, tune="model")(b)))
+    # serve() redeposits the same way
+    rid2 = eng.submit("direct", "spmm", b=b)
+    eng.serve([("direct", "spmm", {"b": _f32(rng, a.k, 32)})])
+    assert rid2 in eng.flush()
+
+
+def test_registry_warm_precompiles_bucket_executables():
+    a = mixed_csr(80, 64, seed=2)
+    reg = GraphRegistry(max_graphs=2, width_buckets=(16, 32),
+                        panel_buckets=(1, 2))
+    reg.register(a, name="g", ops=("spmm",), warm_widths=(16, 32))
+    # column packing dedupes (w16, p2) with (w32, p1): 3 distinct shapes
+    assert reg.stats()["warmed_executables"] == 3
+    eng = SparseEngine(reg)
+    rng = np.random.default_rng(0)
+    eng.serve([("g", "spmm", {"b": _f32(rng, a.k, 16)}),
+               ("g", "spmm", {"b": _f32(rng, a.k, 32)})])
+    st = eng.stats()
+    assert st["exec_cache_misses"] == 0   # warm start: every hit
+    assert st["exec_cache_hits"] == 2
+
+
+# ------------------------------------------------------------ admission ---
+def test_admission_rejection_paths(rng):
+    a = mixed_csr(64, 48, seed=3)
+    reg = GraphRegistry(max_graphs=2, width_buckets=(32, 64))
+    reg.register(a, name="g", ops=("spmm",))
+    eng = SparseEngine(reg, max_queue=2)
+
+    def reason(fn):
+        with pytest.raises(AdmissionError) as ei:
+            fn()
+        return ei.value.reason
+
+    assert reason(lambda: eng.submit("nope", "spmm",
+                                     b=jnp.zeros((48, 8)))) == "unknown_graph"
+    assert reason(lambda: eng.submit("g", "sddmm",
+                                     x=jnp.zeros((64, 8)),
+                                     y=jnp.zeros((48, 8)))) == "op_unavailable"
+    assert reason(lambda: eng.submit("g", "qr",
+                                     b=jnp.zeros((48, 8)))) == "op_unavailable"
+    assert reason(lambda: eng.submit("g", "spmm",
+                                     b=jnp.zeros((47, 8)))) == "bad_shape"
+    assert reason(lambda: eng.submit("g", "spmm",
+                                     b=[[1.0, 2.0]])) == "bad_shape"
+    assert reason(lambda: eng.submit("g", "spmm",
+                                     b=jnp.zeros((48, 128)))
+                  ) == "width_too_large"
+    assert reason(lambda: eng.submit("g", "spmm", b=jnp.zeros((48, 8)),
+                                     edge_vals=jnp.zeros(3))) == "bad_shape"
+    eng.submit("g", "spmm", b=_f32(rng, a.k, 8))
+    eng.submit("g", "spmm", b=_f32(rng, a.k, 8))
+    assert reason(lambda: eng.submit("g", "spmm",
+                                     b=_f32(rng, a.k, 8))) == "queue_full"
+    st = eng.stats()
+    assert st["rejected"] == {"unknown_graph": 1, "op_unavailable": 2,
+                              "bad_shape": 3, "width_too_large": 1,
+                              "queue_full": 1}
+    # rejected traffic never entered the queue; admitted traffic drains
+    assert len(eng.flush()) == 2 and eng.queue_depth == 0
+
+
+# ----------------------------------------------------- packing/identity ---
+def test_bucket_packing_bijectivity(rng):
+    """unpad∘pad = id: every rid appears exactly once, at the caller's
+    width, across a mix of graphs, ops, widths, and bucket overflow."""
+    a1, a2 = mixed_csr(96, 80, seed=4), power_law_csr(72, 96, 5.0, seed=5)
+    reg = GraphRegistry(max_graphs=4, width_buckets=(16, 32, 64),
+                        panel_buckets=(1, 2, 4))
+    reg.register(a1, name="g1")
+    reg.register(a2, name="g2")
+    eng = SparseEngine(reg)
+    want = {}
+    for i in range(11):   # > max_panel ⇒ several chunks per bucket
+        w = (7, 16, 23, 32, 64)[i % 5]
+        b = _f32(rng, a1.k, w)
+        want[eng.submit("g1", "spmm", b=b)] = ("spmm", a1.m, w)
+    for i in range(3):
+        w = (16, 24, 32)[i]
+        x, y = _f32(rng, a2.m, w), _f32(rng, a2.k, w)
+        want[eng.submit("g2", "sddmm", x=x, y=y)] = ("sddmm", a2.nnz, None)
+    out = eng.flush()
+    assert sorted(out) == sorted(want)       # exactly the admitted rids
+    for rid, (op, rows, w) in want.items():
+        if op == "spmm":
+            assert out[rid].shape == (rows, w)
+        else:
+            assert out[rid].shape == (rows,)
+    st = eng.stats()
+    assert st["served"] == 14 and st["real_panels"] == 14
+    assert 0.0 < st["bucket_occupancy"] <= 1.0
+    assert 0.0 <= st["padding_waste"] < 1.0
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_engine_bit_identical_to_direct_calls(rng, backend):
+    """Bucket-width requests: engine == direct operator calls, bitwise,
+    on both backends. Sub-bucket widths: engine == direct call on the
+    width-padded operand, bitwise."""
+    a = mixed_csr(96, 80, seed=6)
+    reg = GraphRegistry(max_graphs=2, width_buckets=(32, 64),
+                        panel_buckets=(1, 2, 4), backend=backend)
+    reg.register(a, name="g")
+    eng = SparseEngine(reg)
+    spmm = LibraSpMM(a, tune="model")
+    sddmm = LibraSDDMM(a, tune="model")
+
+    bs = [_f32(rng, a.k, 32) for _ in range(3)]
+    xys = [(_f32(rng, a.m, 64), _f32(rng, a.k, 64)) for _ in range(2)]
+    rids_b = [eng.submit("g", "spmm", b=b) for b in bs]
+    rids_s = [eng.submit("g", "sddmm", x=x, y=y) for x, y in xys]
+    b_sub = _f32(rng, a.k, 20)               # padded up to bucket 32
+    rid_sub = eng.submit("g", "spmm", b=b_sub)
+    out = eng.flush()
+    for rid, b in zip(rids_b, bs):
+        direct = np.asarray(spmm(b, backend=backend))
+        assert np.array_equal(np.asarray(out[rid]), direct)
+    for rid, (x, y) in zip(rids_s, xys):
+        direct = np.asarray(sddmm(x, y, backend=backend))
+        assert np.array_equal(np.asarray(out[rid]), direct)
+    padded = jnp.pad(b_sub, ((0, 0), (0, 12)))
+    direct = np.asarray(spmm(padded, backend=backend))[:, :20]
+    assert np.array_equal(np.asarray(out[rid_sub]), direct)
+    # and the quantized width stays numerically faithful to the
+    # unpadded direct call
+    np.testing.assert_allclose(np.asarray(out[rid_sub]),
+                               np.asarray(spmm(b_sub, backend=backend)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_engine_edge_vals_requests_match_revalued_direct(rng):
+    """Per-request edge values (attention serving) ride the bucket and
+    match the revalued direct apply bitwise."""
+    from repro.kernels import ref
+    from repro.kernels.ops import spmm_apply
+
+    a = mixed_csr(96, 96, seed=7)
+    reg = GraphRegistry(max_graphs=2, width_buckets=(32,),
+                        panel_buckets=(1, 2, 4))
+    reg.register(a, name="g", ops=("spmm",))
+    eng = SparseEngine(reg)
+    op = reg.resolve("g").op("spmm").op     # the underlying LibraSpMM
+    reqs = []
+    for _ in range(3):
+        b = _f32(rng, a.k, 32)
+        ev = _f32(rng, a.nnz)
+        reqs.append((eng.submit("g", "spmm", b=b, edge_vals=ev), b, ev))
+    out = eng.flush()
+    for rid, b, ev in reqs:
+        arrs = ref.revalue_spmm_arrays(op.arrays, ev)
+        direct = np.asarray(spmm_apply(arrs, b, m=op.m, nwin=op.nwin,
+                                       backend="xla", cfg=op.tune_config))
+        assert np.array_equal(np.asarray(out[rid]), direct)
+
+
+def test_engine_sharded_graph_end_to_end(rng):
+    """A graph registered with a mesh serves through the sharded apply
+    (column-packed SpMM, per-request SDDMM + valued SpMM)."""
+    a = mixed_csr(120, 96, seed=8)
+    mesh = jax.make_mesh((1,), ("shards",))
+    reg = GraphRegistry(max_graphs=2, width_buckets=(32,),
+                        panel_buckets=(1, 2, 4))
+    reg.register(a, name="gs", mesh=mesh)
+    eng = SparseEngine(reg)
+    bs = [_f32(rng, a.k, 32) for _ in range(3)]
+    x, y = _f32(rng, a.m, 32), _f32(rng, a.k, 32)
+    ev = _f32(rng, a.nnz)
+    rids = [eng.submit("gs", "spmm", b=b) for b in bs]
+    rid_sd = eng.submit("gs", "sddmm", x=x, y=y)
+    rid_ev = eng.submit("gs", "spmm", b=bs[0], edge_vals=ev)
+    out = eng.flush()
+    spmm = LibraSpMM(a, tune="model")
+    sddmm = LibraSDDMM(a, tune="model")
+    for rid, b in zip(rids, bs):
+        np.testing.assert_allclose(np.asarray(out[rid]),
+                                   np.asarray(spmm(b)),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[rid_sd]),
+                               np.asarray(sddmm(x, y)),
+                               rtol=1e-5, atol=1e-5)
+    dense = a.to_dense()
+    rows, cols, _ = a.to_coo()
+    dv = np.zeros_like(dense)
+    dv[rows, cols] = np.asarray(ev)
+    np.testing.assert_allclose(np.asarray(out[rid_ev]),
+                               dv @ np.asarray(bs[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- GNN service ---
+def test_gnn_service_scores_match_reference_forward(rng):
+    from repro.models import gnn as mgnn
+
+    a = mixed_csr(96, 96, seed=21)
+    reg = GraphRegistry(max_graphs=4)
+    eng = SparseEngine(reg)
+    svc = GNNService(eng)
+    feats = _f32(rng, a.m, 32)
+    g = mgnn.GraphOps(a, tune="model")
+
+    params = mgnn.init_gcn(jax.random.PRNGKey(0), [32, 32, 8])
+    svc.register_gcn("gcn", a, params)
+    s1 = svc.submit("gcn", feats)
+    s2 = svc.submit("gcn", feats * 2, node_ids=[0, 5, 9])
+    res = svc.flush()
+    norm = jnp.asarray(mgnn.gcn_norm_edges(a))
+    want = np.asarray(mgnn.gcn_forward(params, g, feats, norm))
+    np.testing.assert_allclose(np.asarray(res[s1]), want,
+                               rtol=1e-4, atol=1e-5)
+    want2 = np.asarray(mgnn.gcn_forward(params, g, feats * 2, norm))
+    np.testing.assert_allclose(np.asarray(res[s2]), want2[[0, 5, 9]],
+                               rtol=1e-4, atol=1e-5)
+
+    pa = mgnn.init_agnn(jax.random.PRNGKey(1), [32, 8])
+    svc.register_agnn("agnn", a, pa)
+    sa = svc.submit("agnn", feats)
+    sb = svc.submit("agnn", feats + 1.0)     # two requests share buckets
+    res = svc.flush()
+    wanta = np.asarray(mgnn.agnn_forward(pa, g, feats))
+    np.testing.assert_allclose(np.asarray(res[sa]), wanta,
+                               rtol=1e-4, atol=1e-5)
+    assert res[sb].shape == (a.m, 8)
+    with pytest.raises(KeyError):
+        svc.submit("missing", feats)
+
+
+def test_gnn_service_concurrent_requests_batch_per_layer(rng):
+    """N concurrent GCN scorings traverse the engine as one bucket per
+    layer, not N sequential forwards."""
+    from repro.models import gnn as mgnn
+
+    a = mixed_csr(80, 80, seed=22)
+    reg = GraphRegistry(max_graphs=2, width_buckets=(16, 32),
+                        panel_buckets=(1, 2, 4))
+    eng = SparseEngine(reg)
+    svc = GNNService(eng)
+    params = mgnn.init_gcn(jax.random.PRNGKey(0), [32, 32, 16])
+    svc.register_gcn("gcn", a, params)
+    for i in range(4):
+        svc.submit("gcn", _f32(rng, a.m, 32))
+    res = svc.flush()
+    assert len(res) == 4
+    st = eng.stats()
+    # 2 layers × 1 packed bucket each — not 8 single-request executions
+    assert st["panels_executed"] == 2
+    assert st["real_panels"] == 8 and st["bucket_occupancy"] == 1.0

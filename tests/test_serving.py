@@ -48,6 +48,36 @@ def test_mixed_lengths_no_starvation():
     assert [r.rid for r in done][:2] == [1, 2]
 
 
+def test_max_new_zero_completes_immediately():
+    b = ContinuousBatcher(batch_size=2, max_len=16)
+    assert b.submit(Request(0, prompt=[1, 2], max_new=0))
+    # completed at submit: no slot occupied, no step needed
+    assert b.idle
+    assert [r.rid for r in b.finished] == [0]
+    assert b.finished[0].out == [] and b.finished[0].done
+    # mixed with normal traffic: everyone completes, zero-length outputs
+    b.submit(Request(1, prompt=[3], max_new=2))
+    b.submit(Request(2, prompt=[4], max_new=0))
+    done = run_to_completion(b, echo_step)
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[2].out == [] and len(by_rid[1].out) == 2
+
+
+def test_mean_utilization_is_a_field():
+    b = ContinuousBatcher(batch_size=2, max_len=16)
+    assert b.mean_utilization == 0.0  # exists before any run
+    b.submit(Request(0, prompt=[5], max_new=3))
+    run_to_completion(b, echo_step)
+    # one busy slot of two, every step of the run
+    assert b.mean_utilization == 0.5
+    # a run with no steps (all max_new=0) leaves it well-defined
+    b2 = ContinuousBatcher(batch_size=2, max_len=16)
+    b2.submit(Request(1, prompt=[6], max_new=0))
+    run_to_completion(b2, echo_step)
+    assert b2.mean_utilization == 0.0
+
+
 def test_sddmm_cost_model_regimes():
     from repro.core.threshold import modeled_best_sddmm_threshold
     from repro.sparse import banded_csr, random_uniform_csr

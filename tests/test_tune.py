@@ -269,6 +269,55 @@ def test_cache_default_dir_env_override(tmp_path, monkeypatch):
     assert (tmp_path / "env" / "k.json").exists()
 
 
+def test_cache_size_cap_evicts_lru(tmp_path, monkeypatch):
+    import time as _time
+
+    pc = PlanCache(str(tmp_path), max_entries=3)
+    for i in range(6):
+        pc.put(f"k{i}", TuneConfig(kt=8 * (i + 1)))
+        _time.sleep(0.01)   # distinct mtimes on coarse filesystems
+    assert pc.size() == 3
+    assert pc.get("k0") is None and pc.get("k1") is None
+    assert pc.get("k5").kt == 48
+    # a hit refreshes recency: k3 survives the next eviction, k4 goes
+    _time.sleep(0.01)
+    assert pc.get("k3") is not None
+    _time.sleep(0.01)
+    pc.put("k6", TuneConfig(kt=64))
+    assert pc.get("k3") is not None and pc.get("k4") is None
+    # env override for the default cap
+    monkeypatch.setenv("REPRO_TUNE_CACHE_MAX", "7")
+    assert PlanCache(str(tmp_path)).max_entries == 7
+
+
+def test_cache_concurrent_writers_same_key(tmp_path):
+    """Atomic rename keeps racing writers safe: no torn entries, no
+    errors, and the surviving entry is always parseable."""
+    import threading
+
+    pc = PlanCache(str(tmp_path), max_entries=8)
+    errors = []
+
+    def writer(i):
+        try:
+            for j in range(25):
+                pc.put("shared", TuneConfig(kt=8 * (1 + (i + j) % 4)))
+                got = pc.get("shared")
+                assert got is None or got.source == "cache"
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    got = pc.get("shared")
+    assert got is not None and got.kt in (8, 16, 24, 32)
+    assert pc.size() == 1
+
+
 # ------------------------------------------------- numerics / outputs ---
 def test_tuned_configs_bit_identical_outputs_spmm(rng):
     a = _int_valued(power_law_csr(96, 80, 7.0, seed=8))
