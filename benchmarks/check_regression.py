@@ -1,0 +1,117 @@
+# Benchmark-regression gate: compare a fresh ``--json-dir`` run's
+# speedup bars against the committed BENCH_<suite>.json baselines.
+#
+# Only *ratio* bars are compared (the ``x1.37`` / ``0.42x`` values in the
+# ``derived`` column): absolute microseconds differ across machines, but
+# a speedup pits two executables against each other on the same box, so
+# it transfers from the committing machine to a CI runner. A row fails
+# when the fresh bar drops more than ``--tolerance`` (default 15%) below
+# the committed one. Rows present on only one side are reported but
+# never fail the gate (new rows land with their first commit).
+#
+# Usage (the ``bench-regression`` CI job):
+#   python -m benchmarks.run --only fig1,spmm,sddmm --json-dir fresh
+#   python -m benchmarks.check_regression --baseline-dir . \
+#       --fresh-dir fresh --suites fig1,spmm,sddmm
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+# "..._x1.37", "x0.62" (suffix form) or "0.42x" (gmean form).
+_BAR_SUFFIX = re.compile(r"(?:^|_)x(\d+(?:\.\d+)?)$")
+_BAR_PREFIX = re.compile(r"^(\d+(?:\.\d+)?)x$")
+
+
+def parse_bar(derived: str) -> float | None:
+    """Extract the speedup ratio from a ``derived`` string, or None when
+    the row carries no ratio bar (GF/bytes/flags rows)."""
+    m = _BAR_SUFFIX.search(derived) or _BAR_PREFIX.match(derived)
+    return float(m.group(1)) if m else None
+
+
+def load_bars(path: str) -> dict[str, float]:
+    """name → speedup bar for every ratio row of one BENCH json."""
+    with open(path) as f:
+        rows = json.load(f)
+    out = {}
+    for row in rows:
+        bar = parse_bar(str(row.get("derived", "")))
+        if bar is not None:
+            out[str(row["name"])] = bar
+    return out
+
+
+def compare(baseline: dict[str, float], fresh: dict[str, float],
+            tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns (failures, report_lines) over the bars both sides have."""
+    failures, lines = [], []
+    for name in sorted(baseline):
+        if name not in fresh:
+            lines.append(f"  ~ {name}: baseline x{baseline[name]:.2f}, "
+                         "missing from fresh run")
+            continue
+        base, new = baseline[name], fresh[name]
+        floor = base * (1.0 - tolerance)
+        status = "FAIL" if new < floor else "ok"
+        lines.append(f"  {status:>4} {name}: x{base:.2f} -> x{new:.2f} "
+                     f"(floor x{floor:.2f})")
+        if new < floor:
+            failures.append(name)
+    for name in sorted(set(fresh) - set(baseline)):
+        lines.append(f"  + {name}: new bar x{fresh[name]:.2f}")
+    return failures, lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory a fresh `benchmarks.run --json-dir` "
+                         "wrote to")
+    ap.add_argument("--suites", default="fig1,spmm,sddmm",
+                    help="comma-separated suite names to gate")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed fractional drop per bar (default 0.15)")
+    ap.add_argument("--min-bars", type=int, default=1,
+                    help="fail unless at least this many bars compared "
+                         "(guards against silently comparing nothing)")
+    args = ap.parse_args()
+
+    failures: list[str] = []
+    compared = 0
+    for suite in args.suites.split(","):
+        fname = f"BENCH_{suite}.json"
+        base_path = os.path.join(args.baseline_dir, fname)
+        fresh_path = os.path.join(args.fresh_dir, fname)
+        print(f"== {suite} ==")
+        if not os.path.exists(base_path):
+            print(f"  ~ no committed {fname}; skipping suite")
+            continue
+        if not os.path.exists(fresh_path):
+            print(f"  FAIL fresh run produced no {fname}")
+            failures.append(fname)
+            continue
+        base = load_bars(base_path)
+        fresh = load_bars(fresh_path)
+        fails, lines = compare(base, fresh, args.tolerance)
+        print("\n".join(lines) if lines else "  (no ratio bars)")
+        compared += len(set(base) & set(fresh))
+        failures.extend(fails)
+
+    print(f"\ncompared {compared} bars, {len(failures)} regression(s)")
+    if compared < args.min_bars:
+        print(f"FAIL: fewer than --min-bars={args.min_bars} bars compared")
+        sys.exit(1)
+    if failures:
+        for name in failures:
+            print(f"REGRESSION: {name}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

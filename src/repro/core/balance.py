@@ -29,8 +29,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class BalanceParams:
-    ts: int = 32          # max TC blocks per segment (paper Ts)
-    cs: int = 32          # max VPU tile elements per tile row-segment (paper Cs)
+    ts: int = 8           # max TC blocks per segment (paper Ts)
+    cs: int = 128         # max VPU elements per row-segment (paper Cs)
     short_len: int = 3    # rows with ≤ short_len residual nnz are "short tiles"
 
 
@@ -41,11 +41,21 @@ class Segments:
     sizes:   (nseg,) work units per segment
     cur:     (nseg,) original window (TC) or row (VPU) index
     atomic:  (nseg,) bool — output shared with another producer
+    start:   (nseg,) offset of the segment's first work unit in the
+             owner-sorted unit array (TC blocks are window-sorted, VPU
+             tiles row-sorted, so a segment is a contiguous unit slice)
+    limit:   the Ts/Cs cap the decomposition was built with
     """
 
     sizes: np.ndarray
     cur: np.ndarray
     atomic: np.ndarray
+    start: np.ndarray = None
+    limit: int = 0
+
+    @property
+    def nseg(self) -> int:
+        return int(self.sizes.shape[0])
 
 
 def decompose_counts(counts: np.ndarray, limit: int,
@@ -55,20 +65,38 @@ def decompose_counts(counts: np.ndarray, limit: int,
     ``shared_output[i]`` is True when owner ``i``'s output is also produced
     elsewhere (e.g. the window has both TC and VPU work) — its segments are
     atomic even without decomposition (paper Fig. 6, window 1 rule).
+
+    Fully vectorized (``repeat``/``cumsum`` splits — this sits on the
+    preprocessing hot path now that segments drive kernel launch): owner
+    ``i`` with ``c`` units yields ``ceil(c/limit)`` segments, all of size
+    ``limit`` except a ragged last one.
     """
-    sizes, cur, atomic = [], [], []
-    for i, c in enumerate(np.asarray(counts)):
-        c = int(c)
-        if c == 0:
-            continue
-        nseg = (c + limit - 1) // limit
-        shared = bool(shared_output[i]) or nseg > 1
-        for s in range(nseg):
-            sizes.append(min(limit, c - s * limit))
-            cur.append(i)
-            atomic.append(shared)
-    return Segments(np.asarray(sizes, np.int64), np.asarray(cur, np.int64),
-                    np.asarray(atomic, bool))
+    counts = np.asarray(counts, np.int64)
+    shared_output = np.asarray(shared_output, bool)
+    nseg_per = -(-counts // limit)              # ceil; 0 stays 0
+    total = int(nseg_per.sum())
+    if total == 0:
+        z = np.zeros(0, np.int64)
+        return Segments(z, z.copy(), np.zeros(0, bool), z.copy(), limit)
+    cur = np.repeat(np.arange(counts.size, dtype=np.int64), nseg_per)
+    seg_off = np.cumsum(nseg_per) - nseg_per    # first segment id per owner
+    within = np.arange(total, dtype=np.int64) - seg_off[cur]
+    sizes = np.minimum(limit, counts[cur] - within * limit)
+    unit_off = np.cumsum(counts) - counts       # first unit per owner
+    start = unit_off[cur] + within * limit
+    atomic = shared_output[cur] | (nseg_per[cur] > 1)
+    return Segments(sizes, cur, atomic, start, limit)
+
+
+def segment_take(seg: Segments) -> np.ndarray:
+    """Segment-granular launch table: ``(nseg, limit)`` indices into the
+    owner-sorted unit array (TC blocks / VPU tiles), ``-1`` beyond each
+    segment's ragged end. This is the Ts/Cs-padded work slice the kernels
+    iterate the grid over: ``take[s, j]`` is unit ``j`` of segment ``s``.
+    """
+    lanes = np.arange(seg.limit, dtype=np.int64)[None, :]
+    take = seg.start[:, None] + lanes
+    return np.where(lanes < seg.sizes[:, None], take, -1).astype(np.int64)
 
 
 def propagate_atomicity(tc_windows: np.ndarray, tc_atomic: np.ndarray,

@@ -158,8 +158,134 @@ class SDDMMPlan:
     meta: dict[str, Any]
 
 
+def _seg_take_map(seg, n_units: int) -> tuple[np.ndarray, np.ndarray]:
+    """(take, mask) for one §4.3 segment table: ``take`` is ``(nseg,
+    limit)`` indices into the owner-sorted unit array (clamped to valid
+    units) and ``mask`` marks real units. Plans whose path is empty get
+    one dummy all-padding segment so kernel shapes stay static (the
+    exact analogue of the dummy zero TC block)."""
+    from repro.core.balance import segment_take
+
+    if seg.nseg == 0:
+        take = np.full((1, max(seg.limit, 1)), -1, np.int64)
+    else:
+        take = segment_take(seg)
+    mask = take >= 0
+    return np.minimum(np.maximum(take, 0), max(n_units - 1, 0)), mask
+
+
+def _spmm_segment_arrays(plan: "SpMMPlan") -> dict[str, np.ndarray]:
+    """Segment-granular launch tables for the SpMM kernels (§4.3).
+
+    MXU: segment ``s`` owns ≤ ``ts`` condensed blocks of one window,
+    flattened to an ``(8, ts·bk)`` operand (the sum of per-block
+    ``8×bk @ bk×n`` products equals one ``8×(ts·bk) @ (ts·bk)×n``
+    product, so a segment is a single MXU dot). Every segment has its
+    own compacted output slot (``rank = arange``), so the k-tile carry
+    never chains across segments and ``block_outer`` is always legal.
+    VPU: segment ``s`` owns ≤ ``cs`` residual elements (whole tiles) of
+    one row — the same kernel, a wider tile. Padding is inert: zero
+    values multiply B row 0; ``pos`` stays −1 so revaluation skips it.
+    """
+    out: dict[str, np.ndarray] = {}
+    tc_seg = plan.meta.get("tc_segments")
+    if tc_seg is not None:
+        tc = plan.tc
+        take, mask = _seg_take_map(tc_seg, tc.nblk)
+        nseg, w = take.shape
+        win = (tc_seg.cur if tc_seg.nseg else np.zeros(1, np.int64))
+        vals = tc.vals[take] * mask[:, :, None, None]       # (nseg,w,8,bk)
+        cols = np.where(mask[:, :, None], tc.cols[take], 0)
+        pos = (np.where(mask[:, :, None, None], tc.pos[take], -1)
+               if tc.pos is not None else None)
+        bk = tc.vals.shape[-1]
+        out["tc_seg_vals"] = vals.transpose(0, 2, 1, 3).reshape(
+            nseg, WINDOW, w * bk).astype(np.float32)
+        out["tc_seg_cols"] = cols.reshape(nseg, w * bk).astype(np.int32)
+        if pos is not None:
+            out["tc_seg_pos"] = pos.transpose(0, 2, 1, 3).reshape(
+                nseg, WINDOW, w * bk).astype(np.int32)
+        out["tc_seg_rank"] = np.arange(nseg, dtype=np.int32)
+        out["tc_seg_row"] = (
+            win[:, None].astype(np.int64) * WINDOW
+            + np.arange(WINDOW, dtype=np.int64)[None, :]
+        ).reshape(-1).astype(np.int32)
+    vpu_seg = plan.meta.get("vpu_segments")
+    if vpu_seg is not None:
+        vpu = plan.vpu
+        take, mask = _seg_take_map(vpu_seg, vpu.ntiles)
+        nseg, spt = take.shape
+        row = (vpu_seg.cur if vpu_seg.nseg else np.zeros(1, np.int64))
+        ts = vpu.vals.shape[-1]
+        out["vpu_seg_vals"] = (vpu.vals[take] * mask[:, :, None]).reshape(
+            nseg, spt * ts).astype(np.float32)
+        out["vpu_seg_cols"] = np.where(
+            mask[:, :, None], vpu.cols[take], 0
+        ).reshape(nseg, spt * ts).astype(np.int32)
+        if vpu.pos is not None:
+            out["vpu_seg_pos"] = np.where(
+                mask[:, :, None], vpu.pos[take], -1
+            ).reshape(nseg, spt * ts).astype(np.int32)
+        out["vpu_seg_row"] = row.astype(np.int32)
+    return out
+
+
+def _sddmm_segment_arrays(plan: "SDDMMPlan") -> dict[str, np.ndarray]:
+    """Segment-granular launch tables for the SDDMM kernels (§4.3).
+
+    MXU: a segment's ≤ ``ts`` blocks share one window, so one grid step
+    is a single ``8×kf @ kf×(ts·bk)`` score dot sampled by the
+    concatenated bitmaps (zero bitmap padding samples to zero and its
+    ``out_pos`` −1 lands in the scatter's swallow slot). VPU: element
+    tiles are flat, so the Cs cap just batches ``seg_spt`` tiles per
+    grid step (mask-False padding).
+    """
+    out: dict[str, np.ndarray] = {}
+    tc_seg = plan.meta.get("tc_segments")
+    if tc_seg is not None:
+        tc = plan.tc
+        take, mask = _seg_take_map(tc_seg, tc.nblk)
+        nseg, w = take.shape
+        win = (tc_seg.cur if tc_seg.nseg else np.zeros(1, np.int64))
+        bk = tc.cols.shape[-1]
+        out["tc_seg_cols"] = np.where(
+            mask[:, :, None], tc.cols[take], 0
+        ).reshape(nseg, w * bk).astype(np.int32)
+        out["tc_seg_bitmap"] = np.where(
+            mask[:, :, None], tc.bitmap[take], 0
+        ).reshape(nseg, w * bk).astype(np.uint32)
+        out["tc_seg_window"] = win.astype(np.int32)
+        out["tc_seg_out_pos"] = np.where(
+            mask[:, :, None, None], plan.tc_out_pos[take], -1
+        ).transpose(0, 2, 1, 3).reshape(nseg, WINDOW, w * bk).astype(np.int32)
+    spt = int(plan.meta.get("seg_spt", 1))
+    if spt > 1:
+        vpu = plan.vpu
+        nt, ts = vpu.rows.shape
+        nsegE = -(-nt // spt)
+        pad = nsegE * spt - nt
+
+        def _grp(x, fill):
+            x = np.concatenate(
+                [x, np.full((pad, ts), fill, x.dtype)]) if pad else x
+            return x.reshape(nsegE, spt * ts)
+
+        out["vpu_seg_rows"] = _grp(vpu.rows, 0).astype(np.int32)
+        out["vpu_seg_cols"] = _grp(vpu.cols, 0).astype(np.int32)
+        out["vpu_seg_out_pos"] = _grp(vpu.out_pos, 0).astype(np.int32)
+        out["vpu_seg_mask"] = _grp(vpu.mask, False)
+    return out
+
+
 def device_arrays(plan) -> dict[str, jnp.ndarray]:
-    """Upload a plan's arrays once; reused across iterations (paper §4.1 ③)."""
+    """Upload a plan's arrays once; reused across iterations (paper §4.1 ③).
+
+    Besides the compact per-block/per-tile tensors (the XLA reference
+    path and the revaluation maps), plans carrying §4.3 segment tables
+    also upload the segment-granular launch view the Pallas kernels
+    iterate over (``*_seg_*`` keys — see :func:`_spmm_segment_arrays` /
+    :func:`_sddmm_segment_arrays`).
+    """
     out = {}
     if isinstance(plan, SpMMPlan):
         # tc_active_row: flat output-row index of every compacted TC row —
@@ -181,6 +307,8 @@ def device_arrays(plan) -> dict[str, jnp.ndarray]:
             vpu_row=jnp.asarray(plan.vpu.row),
             vpu_pos=jnp.asarray(plan.vpu.pos),
         )
+        out.update({k: jnp.asarray(v)
+                    for k, v in _spmm_segment_arrays(plan).items()})
     elif isinstance(plan, SDDMMPlan):
         out.update(
             tc_cols=jnp.asarray(plan.tc.cols),
@@ -192,6 +320,8 @@ def device_arrays(plan) -> dict[str, jnp.ndarray]:
             vpu_out_pos=jnp.asarray(plan.vpu.out_pos),
             vpu_mask=jnp.asarray(plan.vpu.mask),
         )
+        out.update({k: jnp.asarray(v)
+                    for k, v in _sddmm_segment_arrays(plan).items()})
     else:  # pragma: no cover
         raise TypeError(type(plan))
     return out

@@ -15,7 +15,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.balance import BalanceParams, decompose_counts, propagate_atomicity
+import dataclasses
+
+from repro.core.balance import (
+    BalanceParams,
+    Segments,
+    decompose_counts,
+    propagate_atomicity,
+)
 from repro.core.distribution import split_sddmm_window, split_spmm_window
 from repro.core.formats import (
     COOTiles,
@@ -42,6 +49,57 @@ def _resolve(explicit, cfg_value, default):
     if cfg_value is not None:
         return cfg_value
     return default
+
+
+def _resolve_balance(balance: BalanceParams | None,
+                     cfg: TuneConfig | None) -> BalanceParams:
+    """§4.3 segment caps resolve explicit ``balance`` > ``cfg.ts``/``cfg.cs``
+    > the :class:`BalanceParams` defaults. A cap of 0 disables that
+    path's segmentation (legacy per-block / per-tile launch)."""
+    if balance is not None:
+        return balance
+    return BalanceParams(
+        ts=_resolve(None, cfg and cfg.ts, BalanceParams.ts),
+        cs=_resolve(None, cfg and cfg.cs, BalanceParams.cs))
+
+
+def _propagate_segment_atomicity(
+        tc_seg: Segments | None, vpu_seg: Segments | None
+) -> tuple[Segments | None, Segments | None]:
+    """Paper Fig. 6 window-1 rule at segment granularity: once any
+    segment writing into a window is atomic (decomposed or shared), every
+    other segment of that window becomes atomic too. VPU segment owners
+    are rows; their window is ``row // WINDOW``."""
+    if tc_seg is None or vpu_seg is None or not tc_seg.nseg \
+            or not vpu_seg.nseg:
+        return tc_seg, vpu_seg
+    vpu_win = vpu_seg.cur // WINDOW
+    hot = np.union1d(tc_seg.cur[tc_seg.atomic], vpu_win[vpu_seg.atomic])
+    tc_seg = dataclasses.replace(
+        tc_seg, atomic=tc_seg.atomic | np.isin(tc_seg.cur, hot))
+    vpu_seg = dataclasses.replace(
+        vpu_seg, atomic=vpu_seg.atomic | np.isin(vpu_win, hot))
+    return tc_seg, vpu_seg
+
+
+def _spmm_segments(tc_blocks_per_win: np.ndarray, shared: np.ndarray,
+                   tiles_per_row: np.ndarray, row_shared: np.ndarray,
+                   balance: BalanceParams, ts_tile: int
+                   ) -> tuple[Segments | None, Segments | None, int]:
+    """Build both §4.3 segment launch tables for one SpMM plan.
+
+    TC segments own ≤ ``ts`` condensed blocks of one window; VPU
+    segments own ≤ ``cs`` residual elements (whole ``ts_tile`` tiles) of
+    one row. Returns ``(tc_seg, vpu_seg, spt)`` where ``spt`` is the
+    tiles-per-VPU-segment grouping.
+    """
+    spt = max(1, balance.cs // max(ts_tile, 1))
+    tc_seg = (decompose_counts(tc_blocks_per_win, balance.ts, shared)
+              if balance.ts > 0 else None)
+    vpu_seg = (decompose_counts(tiles_per_row, spt, row_shared)
+               if balance.cs > 0 else None)
+    tc_seg, vpu_seg = _propagate_segment_atomicity(tc_seg, vpu_seg)
+    return tc_seg, vpu_seg, spt
 
 
 def _pad_blocks(vals, cols, bitmap, window, atomic, nnz, bk, pos=None) -> TCBlocks:
@@ -93,7 +151,7 @@ def preprocess_spmm(
                          DEFAULT_SPMM_THRESHOLD)
     bk = _resolve(bk, cfg and cfg.bk, DEFAULT_BK_SPMM)
     ts_tile = _resolve(ts_tile, cfg and cfg.ts_tile, 32)
-    balance = balance or BalanceParams()
+    balance = _resolve_balance(balance, cfg)
     nwin = num_windows(a.m)
     rows, cols, vals = a.to_coo()
     pos = np.arange(rows.shape[0], dtype=np.int32)
@@ -208,6 +266,7 @@ def preprocess_spmm(
         t_row_arr = np.zeros(0, np.int32)
         t_long_arr = np.zeros(0, bool)
         tile_atomic = np.zeros(0, bool)
+        tiles_per_row = np.zeros(a.m, np.int64)
 
     if len(tc_win_arr):
         blk_atomic, tile_atomic = propagate_atomicity(
@@ -231,9 +290,15 @@ def preprocess_spmm(
                        np.zeros(1, bool), 0, ts_tile,
                        pos=np.full((1, ts_tile), -1, np.int32))
 
+    row_shared = win_has_tc[np.arange(a.m, dtype=np.int64) // WINDOW] \
+        if a.m else np.zeros(0, bool)
+    tc_seg, vpu_seg, spt = _spmm_segments(
+        tc_blocks_per_win, shared, tiles_per_row, row_shared,
+        balance, ts_tile)
     meta = {
-        "tc_segments": decompose_counts(tc_blocks_per_win, balance.ts,
-                                        shared),
+        "tc_segments": tc_seg,
+        "vpu_segments": vpu_seg,
+        "seg_spt": spt,
         "tc_nnz": tc_nnz,
         "vpu_nnz": vpu_nnz,
         "tc_ratio": tc_nnz / max(a.nnz, 1),
@@ -252,7 +317,13 @@ def _empty_spmm_plan(a, threshold, bk, ts_tile, balance) -> SpMMPlan:
                    np.zeros(1, np.int32), np.zeros(1, bool),
                    np.zeros(1, bool), 0, ts_tile,
                    pos=np.full((1, ts_tile), -1, np.int32))
-    meta = {"tc_segments": None, "tc_nnz": 0, "vpu_nnz": 0, "tc_ratio": 0.0,
+    tc_seg, vpu_seg, spt = _spmm_segments(
+        np.zeros(num_windows(a.m), np.int64),
+        np.zeros(num_windows(a.m), bool),
+        np.zeros(a.m, np.int64),
+        np.zeros(a.m, bool), balance, ts_tile)
+    meta = {"tc_segments": tc_seg, "vpu_segments": vpu_seg, "seg_spt": spt,
+            "tc_nnz": 0, "vpu_nnz": 0, "tc_ratio": 0.0,
             "has_tc": False, "has_vpu": False, "balance": balance}
     return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)
 
@@ -265,7 +336,7 @@ def _preprocess_spmm_semivectorized(
     balance: BalanceParams | None = None,
 ) -> SpMMPlan:
     """Previous per-window implementation (kept as a cross-check oracle)."""
-    balance = balance or BalanceParams()
+    balance = _resolve_balance(balance, None)
     wvs = extract_windows(a)
     nwin = num_windows(a.m)
 
@@ -317,7 +388,6 @@ def _preprocess_spmm_semivectorized(
 
     # --- Balance the MXU portion: ≤ Ts blocks per segment.
     shared = win_has_tc & win_has_vpu
-    tc_seg = decompose_counts(tc_blocks_per_win, balance.ts, shared)
 
     # --- VPU portion: short/long split + Cs decomposition into tiles.
     t_vals, t_cols, t_row, t_long, t_pos = [], [], [], [], []
@@ -381,8 +451,18 @@ def _preprocess_spmm_semivectorized(
             pos=np.full((1, ts_tile), -1, np.int32),
         )
 
+    tiles_per_row_sv = np.bincount(
+        np.asarray(t_row, np.int64), minlength=a.m).astype(np.int64) \
+        if t_row else np.zeros(a.m, np.int64)
+    row_shared_sv = win_has_tc[np.arange(a.m, dtype=np.int64) // WINDOW] \
+        if a.m else np.zeros(0, bool)
+    tc_seg, vpu_seg, spt = _spmm_segments(
+        tc_blocks_per_win, shared, tiles_per_row_sv, row_shared_sv,
+        balance, ts_tile)
     meta = {
         "tc_segments": tc_seg,
+        "vpu_segments": vpu_seg,
+        "seg_spt": spt,
         "tc_nnz": tc_nnz,
         "vpu_nnz": vpu_nnz,
         "tc_ratio": tc_nnz / max(a.nnz, 1),
@@ -411,7 +491,7 @@ def preprocess_sddmm(
                          DEFAULT_SDDMM_THRESHOLD)
     bk = _resolve(bk, cfg and cfg.bk, DEFAULT_BK_SDDMM)
     ts_tile = _resolve(ts_tile, cfg and cfg.ts_tile, 32)
-    balance = balance or BalanceParams()
+    balance = _resolve_balance(balance, cfg)
     wvs = extract_windows(a)
     nwin = num_windows(a.m)
 
@@ -499,7 +579,15 @@ def preprocess_sddmm(
         "tc_ratio": tc_nnz / max(a.nnz, 1),
         "has_tc": bool(tc_nnz),
         "has_vpu": bool(n_el),
-        "tc_segments": decompose_counts(tc_blocks_per_win, balance.ts, shared),
+        # §4.3 segment tables: windows decomposed at ≤ ts blocks. SDDMM
+        # element tiles are flat (no per-row ownership, every score has
+        # its own canonical output slot ⇒ no atomicity), so the Cs cap
+        # only batches ``seg_spt`` tiles per VPU grid step.
+        "tc_segments": (decompose_counts(tc_blocks_per_win, balance.ts,
+                                         shared)
+                        if balance.ts > 0 else None),
+        "vpu_segments": None,
+        "seg_spt": max(1, balance.cs // max(ts_tile, 1)),
         "balance": balance,
     }
     assert tc_nnz + n_el == a.nnz
@@ -597,5 +685,5 @@ def preprocess_spmm_loop(a: SparseCSR, threshold: int = DEFAULT_SPMM_THRESHOLD,
     meta = {"tc_nnz": tc_nnz, "vpu_nnz": vpu_nnz,
             "tc_ratio": tc_nnz / max(a.nnz, 1), "has_tc": bool(tc_nnz),
             "has_vpu": bool(vpu_nnz), "balance": balance,
-            "tc_segments": None}
+            "tc_segments": None, "vpu_segments": None, "seg_spt": 1}
     return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)

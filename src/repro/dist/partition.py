@@ -49,8 +49,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import preprocess
-from repro.core.balance import balance_report
-from repro.core.formats import WINDOW
+from repro.core.balance import BalanceParams, balance_report
+from repro.core.formats import (
+    WINDOW,
+    _sddmm_segment_arrays,
+    _spmm_segment_arrays,
+)
 from repro.core.sddmm import threshold_for_mode as sddmm_threshold_for_mode
 from repro.core.spmm import threshold_for_mode as spmm_threshold_for_mode
 from repro.core.windows import num_windows
@@ -59,22 +63,72 @@ from repro.tune import TuneConfig, tune_sddmm, tune_spmm
 
 
 # ------------------------------------------------------- window split ---
-def shard_windows(a: SparseCSR, n_shards: int) -> np.ndarray:
-    """Contiguous window ranges balanced by nnz.
+def shard_windows(a: SparseCSR, n_shards: int,
+                  weights: np.ndarray | None = None) -> np.ndarray:
+    """Contiguous window ranges balanced on a per-window cost curve.
 
     Returns ``bounds`` of shape ``(n_shards + 1,)``: shard ``i`` owns
     windows ``[bounds[i], bounds[i+1])``. Boundaries sit where the
-    cumulative nnz curve crosses ``i · nnz/P``, so every shard's nnz is
-    within one window's nnz of the ideal split (shards may be empty when
-    ``P > nwin``).
+    cumulative cost curve crosses ``i · total/P``, so every shard's cost
+    is within one window's cost of the ideal split (shards may be empty
+    when ``P > nwin``). ``weights`` is the per-window cost (the
+    partitioners pass the §4.3 *segment curve* — kernel grid steps, the
+    quantity that actually bounds per-device latency on skewed
+    matrices); ``None`` falls back to raw nnz.
     """
     nwin = num_windows(a.m)
-    row_ends = np.minimum((np.arange(nwin) + 1) * WINDOW, a.m)
-    cum = a.indptr[row_ends].astype(np.float64)  # nnz through window w
-    targets = a.nnz * (np.arange(1, n_shards) / n_shards)
+    if weights is None:
+        row_ends = np.minimum((np.arange(nwin) + 1) * WINDOW, a.m)
+        cum = a.indptr[row_ends].astype(np.float64)  # nnz through window w
+        total = float(a.nnz)
+    else:
+        weights = np.asarray(weights, np.float64)
+        assert weights.shape == (nwin,), (weights.shape, nwin)
+        cum = np.cumsum(weights)
+        total = float(cum[-1]) if nwin else 0.0
+    targets = total * (np.arange(1, n_shards) / n_shards)
     inner = np.searchsorted(cum, targets, side="left") + 1
     bounds = np.concatenate([[0], np.minimum(inner, nwin), [nwin]])
     return np.maximum.accumulate(bounds).astype(np.int64)
+
+
+def segment_curve(a: SparseCSR, *, op: str, threshold: int, bk: int,
+                  seg_ts: int, seg_cs: int, ts_tile: int,
+                  feat=None) -> np.ndarray:
+    """Per-window §4.3 segment counts — the number of kernel grid steps
+    (launch-table rows) each window contributes under the given caps.
+
+    This is the curve the partitioners balance on: on power-law
+    matrices, raw nnz under-weights windows whose work decomposes into
+    many bounded segments (padding, per-step overhead), which is exactly
+    where per-device latency skews. The VPU term lower-bounds segments
+    by ``ceil(residual/cs)`` (row raggedness ignored — a balance
+    heuristic, not a launch table). ``feat`` (a precomputed
+    :func:`~repro.tune.model.matrix_features`) avoids a second full
+    feature pass when the caller already tuned on the same matrix.
+    """
+    from repro.tune.model import matrix_features, sddmm_window_split
+
+    feat = feat if feat is not None else matrix_features(a)
+    hist = feat.win_vec_hist
+    counts = np.arange(WINDOW + 1)
+    nnz_w = (hist * counts[None, :]).sum(axis=1)
+    if op == "spmm":
+        t = int(np.clip(threshold, 1, WINDOW + 1))
+        vec_tc_w = feat.vectors_at_least(threshold)
+        tc_nnz_w = (hist[:, t:] * counts[None, t:]).sum(axis=1)
+        blocks_w = -(-vec_tc_w // bk)
+    else:  # sddmm: the cost model's block-granularity split, shared
+        tc_mask, nblk_w, nnz_win = sddmm_window_split(feat, threshold, bk)
+        blocks_w = np.where(tc_mask, nblk_w, 0).astype(np.int64)
+        tc_nnz_w = np.where(tc_mask, nnz_win, 0)
+    tc_segs = -(-blocks_w // seg_ts) if seg_ts > 0 else blocks_w
+    res_w = nnz_w - tc_nnz_w
+    cs_eff = max(seg_cs if seg_cs > 0 else ts_tile, 1)
+    vpu_segs = -(-res_w // cs_eff)
+    # matrix_features pads the histogram to max(nwin, 1) rows; trim so
+    # an empty (m=0) matrix yields the empty curve shard_windows expects.
+    return (tc_segs + vpu_segs).astype(np.int64)[:num_windows(a.m)]
 
 
 def column_halo(a: SparseCSR, r0: int, r1: int
@@ -113,8 +167,9 @@ class Shard:
     cfg: TuneConfig      # this shard's tuned plan-selection config
 
 
-def _make_shards(a: SparseCSR, n_shards: int) -> list[tuple]:
-    bounds = shard_windows(a, n_shards)
+def _make_shards(a: SparseCSR, n_shards: int,
+                 weights: np.ndarray | None = None) -> list[tuple]:
+    bounds = shard_windows(a, n_shards, weights)
     out = []
     for p in range(n_shards):
         w0, w1 = int(bounds[p]), int(bounds[p + 1])
@@ -126,9 +181,13 @@ def _make_shards(a: SparseCSR, n_shards: int) -> list[tuple]:
     return out
 
 
-def _combine_run_cfg(cfgs: list[TuneConfig], bk, ts_tile) -> TuneConfig:
+def _combine_run_cfg(cfgs: list[TuneConfig], bk, ts_tile,
+                     seg_ts, seg_cs) -> TuneConfig:
     """One kernel-tile config every shard can run: min tiles across
-    shards (VMEM-safe on all of them), always-legal grid order."""
+    shards (VMEM-safe on all of them), always-legal grid order. The
+    §4.3 segment caps ride through verbatim — they are unified across
+    shards before preprocessing (stacked launch tables must agree in
+    width), like ``bk``/``ts_tile``."""
     def opt_min(vals):
         got = [v for v in vals if v is not None]
         return min(got) if got else None
@@ -140,6 +199,7 @@ def _combine_run_cfg(cfgs: list[TuneConfig], bk, ts_tile) -> TuneConfig:
         yt=opt_min([c.yt for c in cfgs]),
         xt=opt_min([c.xt for c in cfgs]),
         threshold=None, bk=bk, ts_tile=ts_tile,
+        ts=seg_ts, cs=seg_cs,
         grid_order="n_outer", source="dist",
     )
 
@@ -260,6 +320,67 @@ def _timed_apply(part, op: str, *, backend: str, mesh):
     return jax.jit(apply_sddmm)
 
 
+def _stack_spmm_segments(plans, shards, n_shards) -> dict[str, np.ndarray]:
+    """Pad/stack each shard's §4.3 segment launch tables on the leading
+    shard axis. Padding segments are inert: zero values scatter zeros
+    onto local row 0, pos −1 skips revaluation, and ranks stay unique
+    (``arange``) so the Pallas kernel writes every padded output slot."""
+    seg_list = [_spmm_segment_arrays(p) for p in plans]
+    out: dict[str, np.ndarray] = {}
+    if "tc_seg_vals" in seg_list[0]:
+        ns = max(s["tc_seg_rank"].shape[0] for s in seg_list)
+        wbk = seg_list[0]["tc_seg_vals"].shape[-1]
+        vals = np.zeros((n_shards, ns, WINDOW, wbk), np.float32)
+        cols = np.zeros((n_shards, ns, wbk), np.int32)
+        pos = np.full((n_shards, ns, WINDOW, wbk), -1, np.int32)
+        row = np.zeros((n_shards, ns * WINDOW), np.int32)
+        for p, (s, sh) in enumerate(zip(seg_list, shards)):
+            k = s["tc_seg_rank"].shape[0]
+            vals[p, :k] = s["tc_seg_vals"]
+            cols[p, :k] = s["tc_seg_cols"]
+            pos[p, :k] = _offset_pos(s["tc_seg_pos"], sh.nnz_start)
+            row[p, :k * WINDOW] = s["tc_seg_row"]
+        rank = np.broadcast_to(np.arange(ns, dtype=np.int32),
+                               (n_shards, ns)).copy()
+        out.update(tc_seg_vals=vals, tc_seg_cols=cols, tc_seg_pos=pos,
+                   tc_seg_row=row, tc_seg_rank=rank)
+    if "vpu_seg_vals" in seg_list[0]:
+        ns = max(s["vpu_seg_row"].shape[0] for s in seg_list)
+        w = seg_list[0]["vpu_seg_vals"].shape[-1]
+        vals = np.zeros((n_shards, ns, w), np.float32)
+        cols = np.zeros((n_shards, ns, w), np.int32)
+        pos = np.full((n_shards, ns, w), -1, np.int32)
+        row = np.zeros((n_shards, ns), np.int32)
+        for p, (s, sh) in enumerate(zip(seg_list, shards)):
+            k = s["vpu_seg_row"].shape[0]
+            vals[p, :k] = s["vpu_seg_vals"]
+            cols[p, :k] = s["vpu_seg_cols"]
+            pos[p, :k] = _offset_pos(s["vpu_seg_pos"], sh.nnz_start)
+            row[p, :k] = s["vpu_seg_row"]
+        out.update(vpu_seg_vals=vals, vpu_seg_cols=cols, vpu_seg_pos=pos,
+                   vpu_seg_row=row)
+    return out
+
+
+def _segment_load_meta(plans) -> dict[str, Any]:
+    """Per-shard §4.3 segment counts (= kernel grid steps) — the load
+    the segment-curve split balances."""
+    def nseg(p):
+        tc = p.meta.get("tc_segments")
+        vpu = p.meta.get("vpu_segments")
+        n = (tc.nseg if tc is not None else 0) \
+            + (vpu.nseg if vpu is not None else 0)
+        if vpu is None:  # SDDMM: flat element tiles grouped by seg_spt
+            n += -(-p.vpu.ntiles // int(p.meta.get("seg_spt", 1)))
+        return int(n)
+
+    per = [nseg(p) for p in plans]
+    mean = max(sum(per) / max(len(per), 1), 1e-9)
+    return {"shard_segments": per,
+            "segment_balance": {"max_over_mean": max(per) / mean,
+                                "shards": len(per)}}
+
+
 # ----------------------------------------------------------- partitions ---
 @dataclasses.dataclass(frozen=True)
 class SpMMPartition:
@@ -307,19 +428,32 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
                               cache=tune_cache)
         meta = {**part.meta, "run_cfg_source": cfg.source}
         return dataclasses.replace(part, run_cfg=cfg, meta=meta)
-    # One global feature pass fixes the common block geometry.
+    # One global feature pass fixes the common block geometry (shared by
+    # the base tune and the segment curve — no second O(nnz) pass).
+    from repro.tune.model import matrix_features
+
+    feat = matrix_features(a)
     base = tune_spmm(a, mode=mode, threshold=threshold, tune=tune,
-                     n=tune_n, bk=bk, ts_tile=ts_tile)
+                     n=tune_n, bk=bk, ts_tile=ts_tile, feat=feat)
     bk_c = bk if bk is not None else (base.bk or preprocess.DEFAULT_BK_SPMM)
     ts_c = ts_tile if ts_tile is not None else (base.ts_tile or 32)
+    # §4.3 segment caps are unified like bk/ts_tile: stacked launch
+    # tables must agree in width across shards.
+    seg_ts = base.ts if base.ts is not None else BalanceParams.ts
+    seg_cs = base.cs if base.cs is not None else BalanceParams.cs
 
-    raw = _make_shards(a, n_shards)
     forced = (spmm_threshold_for_mode(mode, threshold)
               if mode != "hybrid" else threshold)
+    curve = segment_curve(
+        a, op="spmm", threshold=spmm_threshold_for_mode(
+            mode, forced if forced is not None else base.threshold),
+        bk=bk_c, seg_ts=seg_ts, seg_cs=seg_cs, ts_tile=ts_c, feat=feat)
+    raw = _make_shards(a, n_shards, weights=curve)
     shards, plans = [], []
     for p, w0, w1, r0, r1, halo, sub, nz0, nz1 in raw:
         cfg = tune_spmm(sub, mode=mode, threshold=forced, tune=tune,
                         n=tune_n, bk=bk_c, ts_tile=ts_c)
+        cfg = cfg.replace(ts=seg_ts, cs=seg_cs)
         thr = spmm_threshold_for_mode(mode, cfg.threshold)
         plan = preprocess.preprocess_spmm(sub, thr, cfg=cfg)
         shards.append(Shard(p, w0, w1, r0, r1 - r0, nz0, nz1 - nz0,
@@ -372,22 +506,66 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
         rr = np.arange(shard.rows)
         out_gather[shard.row_start + rr] = shard.index * rows_pad + rr
 
-    stacked = {k: jnp.asarray(v) for k, v in dict(
+    host = dict(
         tc_vals=tc_vals, tc_cols=tc_cols, tc_rank=tc_rank,
         tc_active_row=tc_active_row, tc_pos=tc_pos,
         vpu_vals=vpu_vals, vpu_cols=vpu_cols, vpu_row=vpu_row,
-        vpu_pos=vpu_pos, halo=halo_arr).items()}
+        vpu_pos=vpu_pos, halo=halo_arr)
+    host.update(_stack_spmm_segments(plans, shards, n_shards))
+    stacked = {k: jnp.asarray(v) for k, v in host.items()}
     meta = {
         "balance": balance_report(
             np.asarray([s.nnz for s in shards], np.int64), n_shards),
         "halo_rows": [int(s.halo.size) for s in shards],
         "shard_nnz": [s.nnz for s in shards],
         "mode": mode,
+        **_segment_load_meta(plans),
     }
     return SpMMPartition(a.m, a.k, a.nnz, n_shards, shards, stacked,
                          wmax, rows_pad,
-                         _combine_run_cfg([s.cfg for s in shards], bk_c, ts_c),
+                         _combine_run_cfg([s.cfg for s in shards], bk_c,
+                                          ts_c, seg_ts, seg_cs),
                          jnp.asarray(out_gather), meta)
+
+
+def _stack_sddmm_segments(plans, n_shards) -> dict[str, np.ndarray]:
+    """SDDMM flavour of :func:`_stack_spmm_segments`. Out-positions stay
+    shard-local (the scatter targets the local nnz slice; ``nnz_gather``
+    reassembles) — padding carries bitmap 0 / mask False and pos −1/0,
+    which the swallow slot absorbs."""
+    seg_list = [_sddmm_segment_arrays(p) for p in plans]
+    out: dict[str, np.ndarray] = {}
+    if "tc_seg_cols" in seg_list[0]:
+        ns = max(s["tc_seg_window"].shape[0] for s in seg_list)
+        wbk = seg_list[0]["tc_seg_cols"].shape[-1]
+        cols = np.zeros((n_shards, ns, wbk), np.int32)
+        bitmap = np.zeros((n_shards, ns, wbk), np.uint32)
+        win = np.zeros((n_shards, ns), np.int32)
+        opos = np.full((n_shards, ns, WINDOW, wbk), -1, np.int32)
+        for p, s in enumerate(seg_list):
+            k = s["tc_seg_window"].shape[0]
+            cols[p, :k] = s["tc_seg_cols"]
+            bitmap[p, :k] = s["tc_seg_bitmap"]
+            win[p, :k] = s["tc_seg_window"]
+            opos[p, :k] = s["tc_seg_out_pos"]
+        out.update(tc_seg_cols=cols, tc_seg_bitmap=bitmap,
+                   tc_seg_window=win, tc_seg_out_pos=opos)
+    if "vpu_seg_rows" in seg_list[0]:
+        ns = max(s["vpu_seg_rows"].shape[0] for s in seg_list)
+        w = seg_list[0]["vpu_seg_rows"].shape[-1]
+        rows = np.zeros((n_shards, ns, w), np.int32)
+        cols = np.zeros((n_shards, ns, w), np.int32)
+        opos = np.zeros((n_shards, ns, w), np.int32)
+        mask = np.zeros((n_shards, ns, w), bool)
+        for p, s in enumerate(seg_list):
+            k = s["vpu_seg_rows"].shape[0]
+            rows[p, :k] = s["vpu_seg_rows"]
+            cols[p, :k] = s["vpu_seg_cols"]
+            opos[p, :k] = s["vpu_seg_out_pos"]
+            mask[p, :k] = s["vpu_seg_mask"]
+        out.update(vpu_seg_rows=rows, vpu_seg_cols=cols,
+                   vpu_seg_out_pos=opos, vpu_seg_mask=mask)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -429,18 +607,28 @@ def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
                               cache=tune_cache)
         meta = {**part.meta, "run_cfg_source": cfg.source}
         return dataclasses.replace(part, run_cfg=cfg, meta=meta)
+    from repro.tune.model import matrix_features
+
+    feat = matrix_features(a)
     base = tune_sddmm(a, mode=mode, threshold=threshold, tune=tune,
-                      kf=tune_kf, bk=bk, ts_tile=ts_tile)
+                      kf=tune_kf, bk=bk, ts_tile=ts_tile, feat=feat)
     bk_c = bk if bk is not None else (base.bk or preprocess.DEFAULT_BK_SDDMM)
     ts_c = ts_tile if ts_tile is not None else (base.ts_tile or 32)
+    seg_ts = base.ts if base.ts is not None else BalanceParams.ts
+    seg_cs = base.cs if base.cs is not None else BalanceParams.cs
 
-    raw = _make_shards(a, n_shards)
     forced = (sddmm_threshold_for_mode(mode, bk_c, threshold)
               if mode != "hybrid" else threshold)
+    curve = segment_curve(
+        a, op="sddmm", threshold=sddmm_threshold_for_mode(
+            mode, bk_c, forced if forced is not None else base.threshold),
+        bk=bk_c, seg_ts=seg_ts, seg_cs=seg_cs, ts_tile=ts_c, feat=feat)
+    raw = _make_shards(a, n_shards, weights=curve)
     shards, plans = [], []
     for p, w0, w1, r0, r1, halo, sub, nz0, nz1 in raw:
         cfg = tune_sddmm(sub, mode=mode, threshold=forced, tune=tune,
                          kf=tune_kf, bk=bk_c, ts_tile=ts_c)
+        cfg = cfg.replace(ts=seg_ts, cs=seg_cs)
         thr = sddmm_threshold_for_mode(mode, bk_c, cfg.threshold)
         plan = preprocess.preprocess_sddmm(sub, thr, cfg=cfg)
         shards.append(Shard(p, w0, w1, r0, r1 - r0, nz0, nz1 - nz0,
@@ -485,20 +673,22 @@ def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
         nnz_gather[shard.nnz_start:shard.nnz_start + shard.nnz] = \
             shard.index * nnz_pad + np.arange(shard.nnz)
 
-    stacked = {k: jnp.asarray(v) for k, v in dict(
+    host = dict(
         tc_cols=tc_cols, tc_bitmap=tc_bitmap, tc_window=tc_window,
         tc_out_pos=tc_out_pos, vpu_rows=vpu_rows, vpu_cols=vpu_cols,
-        vpu_out_pos=vpu_out_pos, vpu_mask=vpu_mask,
-        halo=halo_arr).items()}
+        vpu_out_pos=vpu_out_pos, vpu_mask=vpu_mask, halo=halo_arr)
+    host.update(_stack_sddmm_segments(plans, n_shards))
+    stacked = {k: jnp.asarray(v) for k, v in host.items()}
     meta = {
         "balance": balance_report(
             np.asarray([s.nnz for s in shards], np.int64), n_shards),
         "halo_rows": [int(s.halo.size) for s in shards],
         "shard_nnz": [s.nnz for s in shards],
         "mode": mode,
+        **_segment_load_meta(plans),
     }
     return SDDMMPartition(a.m, a.k, a.nnz, n_shards, shards, stacked,
                           wmax, rows_pad, nnz_pad,
                           _combine_run_cfg([s.cfg for s in shards],
-                                           bk_c, ts_c),
+                                           bk_c, ts_c, seg_ts, seg_cs),
                           jnp.asarray(x_take), jnp.asarray(nnz_gather), meta)

@@ -37,6 +37,14 @@ passes. The apply path here makes exactly one pass over every output byte:
    analogue of the paper's atomicAdd combine, touching each output byte
    once. SDDMM likewise combines both streams' scores with a single
    scatter into the canonical nnz vector.
+5. **Segment-granular launch (§4.3).** Plans carrying the hybrid
+   balancer's Ts/Cs launch tables (``*_seg_*`` device arrays — the
+   default) run the kernels one *segment* per grid step: bounded work
+   per step no matter how skewed the matrix, and the scatter epilogue
+   is exactly where atomic segments (decomposed windows/rows, shared
+   windows) combine while non-atomic ones degenerate to stores.
+   ``TuneConfig(ts=0, cs=0)`` falls back to the per-block/per-tile
+   launch.
 """
 from __future__ import annotations
 
@@ -97,22 +105,48 @@ def spmm_apply(arrs, b, *, m: int, nwin: int, backend: str = "xla",
     nt = cfg.nt
     ktile = min(cfg.kt, b.shape[0])
     b_p = _pad_to(_pad_to(b, 1, nt), 0, ktile)
-    n_active = arrs["tc_active_row"].shape[0] // WINDOW
-    # block_outer is only legal with one TC block per compacted rank
-    # (see spmm_mxu docstring); downgrade silently otherwise — the
-    # shapes are static here, so this costs nothing at runtime.
-    nb = arrs["tc_vals"].shape[0]
-    order = cfg.grid_order if nb == n_active else "n_outer"
-    tc = spmm_mxu(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_rank"], b_p,
-                  n_active=n_active, nt=nt, kt=ktile, grid_order=order,
-                  interpret=interpret)
-    partials = spmm_vpu(arrs["vpu_vals"], arrs["vpu_cols"], b_p, nt=nt,
-                        kt=ktile, grid_order=cfg.grid_order,
-                        interpret=interpret)
+    if "tc_seg_vals" in arrs:
+        # Segment-granular launch (§4.3 Ts decomposition): one grid step
+        # per segment of ≤ ts blocks of one window; every segment owns
+        # its own compacted output slot, so any grid order is legal.
+        nseg = arrs["tc_seg_rank"].shape[0]
+        tc = spmm_mxu(arrs["tc_seg_vals"], arrs["tc_seg_cols"],
+                      arrs["tc_seg_rank"], b_p, n_active=nseg, nt=nt,
+                      kt=ktile, grid_order=cfg.grid_order,
+                      unique_ranks=True, interpret=interpret)
+        tc_rows = arrs["tc_seg_row"]
+    else:
+        n_active = arrs["tc_active_row"].shape[0] // WINDOW
+        # block_outer is only legal with one TC block per compacted rank
+        # (see spmm_mxu docstring); downgrade silently otherwise — the
+        # shapes are static here, so this costs nothing at runtime.
+        nb = arrs["tc_vals"].shape[0]
+        order = cfg.grid_order if nb == n_active else "n_outer"
+        tc = spmm_mxu(arrs["tc_vals"], arrs["tc_cols"], arrs["tc_rank"],
+                      b_p, n_active=n_active, nt=nt, kt=ktile,
+                      grid_order=order, interpret=interpret)
+        tc_rows = arrs["tc_active_row"]
+    if "vpu_seg_vals" in arrs:
+        # §4.3 Cs decomposition: one grid step per row-segment of ≤ cs
+        # residual elements (same kernel, wider tiles).
+        partials = spmm_vpu(arrs["vpu_seg_vals"], arrs["vpu_seg_cols"],
+                            b_p, nt=nt, kt=ktile,
+                            grid_order=cfg.grid_order, interpret=interpret)
+        vpu_rows = arrs["vpu_seg_row"]
+    else:
+        partials = spmm_vpu(arrs["vpu_vals"], arrs["vpu_cols"], b_p, nt=nt,
+                            kt=ktile, grid_order=cfg.grid_order,
+                            interpret=interpret)
+        vpu_rows = arrs["vpu_row"]
     # Fused combine epilogue: one scatter-add of both streams' partials
     # into a single zero-initialized C (rows ≥ m from the padded last
     # window are sliced off; TC rows of empty-TC plans add only zeros).
-    rows = jnp.concatenate([arrs["tc_active_row"], arrs["vpu_row"]])
+    # Under the segmented launch this is where atomic segments combine:
+    # non-atomic segments own their rows exclusively (the add is a
+    # store), atomic ones — decomposed windows/rows or TC∩VPU windows —
+    # deterministically accumulate in segment order, the TPU analogue of
+    # the paper's invoke-atomicAdd-only-when-necessary rule.
+    rows = jnp.concatenate([tc_rows, vpu_rows])
     data = jnp.concatenate([tc, partials])
     out = jnp.zeros((nwin * WINDOW, b_p.shape[1]), tc.dtype)
     out = out.at[rows].add(data)
@@ -182,15 +216,36 @@ def sddmm_apply(arrs, x, y, *, nnz: int, backend: str = "xla",
     y_p = y if yt is None else _pad_to(y, 0, yt)
     xt = None if cfg.xt is None else min(cfg.xt, x.shape[0])
     x_v = x if xt is None else _pad_to(x, 0, xt)
-    s_tc = sddmm_mxu(arrs["tc_cols"], arrs["tc_bitmap"], arrs["tc_window"],
-                     x_p, y_p, kf_tile=kt, yt=yt, interpret=interpret)
-    s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x_v, y_p,
-                     kf_tile=kt, yt=yt, xt=xt, interpret=interpret)
-    s_el = jnp.where(arrs["vpu_mask"], s_el, 0.0)
+    if "tc_seg_cols" in arrs:
+        # §4.3 Ts decomposition: one grid step scores a whole segment of
+        # ≤ ts blocks sharing a window — one 8×kf @ kf×(ts·bk) dot,
+        # bitmap-sampled (zero bitmap padding samples to zero and its
+        # out_pos −1 lands in the scatter's swallow slot).
+        s_tc = sddmm_mxu(arrs["tc_seg_cols"], arrs["tc_seg_bitmap"],
+                         arrs["tc_seg_window"], x_p, y_p, kf_tile=kt,
+                         yt=yt, interpret=interpret)
+        tc_pos_src = arrs["tc_seg_out_pos"]
+    else:
+        s_tc = sddmm_mxu(arrs["tc_cols"], arrs["tc_bitmap"],
+                         arrs["tc_window"], x_p, y_p, kf_tile=kt, yt=yt,
+                         interpret=interpret)
+        tc_pos_src = arrs["tc_out_pos"]
+    if "vpu_seg_rows" in arrs:
+        # Cs cap batches whole element tiles per VPU grid step.
+        vpu_mask = arrs["vpu_seg_mask"]
+        s_el = sddmm_vpu(arrs["vpu_seg_rows"], arrs["vpu_seg_cols"], x_v,
+                         y_p, kf_tile=kt, yt=yt, xt=xt, interpret=interpret)
+        el_pos_src = arrs["vpu_seg_out_pos"]
+    else:
+        vpu_mask = arrs["vpu_mask"]
+        s_el = sddmm_vpu(arrs["vpu_rows"], arrs["vpu_cols"], x_v, y_p,
+                         kf_tile=kt, yt=yt, xt=xt, interpret=interpret)
+        el_pos_src = arrs["vpu_out_pos"]
+    s_el = jnp.where(vpu_mask, s_el, 0.0)
     # Fused combine: one scatter of both streams into the canonical nnz
     # vector (slot nnz swallows -1/masked padding).
-    pos_tc = jnp.where(arrs["tc_out_pos"] >= 0, arrs["tc_out_pos"], nnz)
-    pos_el = jnp.where(arrs["vpu_mask"], arrs["vpu_out_pos"], nnz)
+    pos_tc = jnp.where(tc_pos_src >= 0, tc_pos_src, nnz)
+    pos_el = jnp.where(vpu_mask, el_pos_src, nnz)
     pos = jnp.concatenate([pos_tc.reshape(-1), pos_el.reshape(-1)])
     data = jnp.concatenate([s_tc.reshape(-1), s_el.reshape(-1)])
     out = jnp.zeros((nnz + 1,), s_tc.dtype).at[pos].add(data)

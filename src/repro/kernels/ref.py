@@ -105,16 +105,20 @@ def revalue_spmm_arrays(arrs, edge_vals):
     values change — e.g. GNN attention weights per step. ``edge_vals``
     follows canonical CSR nnz order.
     """
-    tc_pos, vpu_pos = arrs["tc_pos"], arrs["vpu_pos"]
-    tc_vals = jnp.where(
-        tc_pos >= 0, jnp.take(edge_vals, jnp.maximum(tc_pos, 0)), 0.0
-    ).astype(jnp.float32)
-    vpu_vals = jnp.where(
-        vpu_pos >= 0, jnp.take(edge_vals, jnp.maximum(vpu_pos, 0)), 0.0
-    ).astype(jnp.float32)
+    def from_pos(pos):
+        return jnp.where(
+            pos >= 0, jnp.take(edge_vals, jnp.maximum(pos, 0)), 0.0
+        ).astype(jnp.float32)
+
     out = dict(arrs)
-    out["tc_vals"] = tc_vals
-    out["vpu_vals"] = vpu_vals
+    out["tc_vals"] = from_pos(arrs["tc_pos"])
+    out["vpu_vals"] = from_pos(arrs["vpu_pos"])
+    # Segment-granular launch tables (§4.3) carry their own value
+    # tensors; their pos maps are −1 on padding, which from_pos zeroes.
+    if "tc_seg_pos" in arrs:
+        out["tc_seg_vals"] = from_pos(arrs["tc_seg_pos"])
+    if "vpu_seg_pos" in arrs:
+        out["vpu_seg_vals"] = from_pos(arrs["vpu_seg_pos"])
     return out
 
 

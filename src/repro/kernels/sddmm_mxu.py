@@ -21,6 +21,16 @@ symmetry with the SpMM kernels):
 
 The bitmap sample is applied once, on the final (feature, Y-panel)
 visit of the block's accumulator.
+
+**Segment-granular launch (§4.3 Ts decomposition).** The preferred
+operand layout is the hybrid balancer's segment table: one grid step
+scores a whole segment of ≤ ``Ts`` blocks sharing a window — ``bk``
+becomes ``ts·bk`` concatenated condensed vectors, the step is a single
+``8×kf @ kf×(ts·bk)`` dot, and the shared window's X panel is fetched
+once per segment instead of once per block. Zero-bitmap cap padding
+samples to zero and its ``out_pos`` −1 lands in the combine's swallow
+slot, so the kernel body is layout-agnostic (this docstring's "block"
+then reads "segment").
 """
 from __future__ import annotations
 

@@ -16,6 +16,13 @@ on a fourth grid dimension. An element contributes only on the one
 other step at least one gathered row is masked to zero, so each element
 is counted exactly once across the sweep. No whole-operand VMEM
 residency remains.
+
+**Segment-granular launch (§4.3 Cs cap).** SDDMM element tiles are
+flat (every score owns its canonical output slot — no atomicity), so
+the hybrid balancer's Cs cap simply batches ``cs/ts`` whole tiles per
+grid step (``ts`` becomes the segment width; mask-False padding rides
+the existing exactly-once accounting). Rows longer than ``cs`` were
+already split across tiles by construction.
 """
 from __future__ import annotations
 

@@ -22,11 +22,23 @@ TPU adaptation of the paper's TCU stream (§4.4), single-pass edition:
   ``take`` on the resident k-tile (clamped indices + an in-tile mask zeroes
   vectors whose source row lives in another k-tile), replacing the
   scalar one-row-at-a-time ``fori_loop`` DMA of the previous revision.
-* Blocks are pre-sorted by window (preprocessing guarantees this), so an
-  output block is revisited consecutively across (block, k-tile) steps:
-  the kernel stores on the first visit and accumulates after — the
-  "store directly when not atomic" case of the hybrid balancer, with no
-  aliased C-init operand at all.
+* **Segment-granular launch (§4.3 Ts decomposition).** The preferred
+  operand layout is the hybrid balancer's segment table: one grid step
+  owns one *segment* of ≤ ``Ts`` condensed blocks of a single window,
+  flattened to an ``(8, ts·bk)`` operand (the sum of per-block
+  ``8×bk @ bk×nt`` products is one ``8×(ts·bk) @ (ts·bk)×nt`` product).
+  Per-step work is bounded by ``Ts`` no matter how long a power-law
+  window is, every segment owns its own compacted output slot
+  (``unique_ranks=True``: the k-tile carry never chains across
+  segments, and ``block_outer`` is always legal), and the caller's
+  fused scatter-add combines segments — the atomic case included:
+  segments marked ``atomic`` (decomposed windows, or windows shared
+  with the VPU path) share scatter rows with another producer, while
+  non-atomic segments own their rows exclusively, so the add degenerates
+  to a store for them. The legacy un-segmented layout (one block per
+  step) remains supported: blocks are pre-sorted by window, so an output
+  block is revisited consecutively across (block, k-tile) steps and the
+  kernel stores on the first visit of a rank, accumulating after.
 
 Grid order (``grid_order``, tuner-selected — paper §4.2's
 occupancy-aware scheduling choice):
@@ -61,8 +73,9 @@ from repro.kernels.gather import panel_gather
 GRID_ORDERS = ("n_outer", "block_outer")
 
 
-def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref, *, block_axis):
-    i = pl.program_id(block_axis)   # TC block index
+def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref, *, block_axis,
+            unique_ranks):
+    i = pl.program_id(block_axis)   # TC block / segment index
     kk = pl.program_id(2)           # k-tile index (fastest)
 
     # --- Batched gather of BK rows from the resident (kt, nt) B panel.
@@ -77,14 +90,20 @@ def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref, *, block_axis):
     )
 
     # --- First visit of this compacted output block ⇒ store, else add.
-    # (first block of the rank AND first k-tile; ranks are non-decreasing.
-    # Under block_outer ranks are unique, so the rank test is always true
-    # for i > 0 and `first` reduces to kk == 0 — correct for every (i, j).)
-    first = jnp.logical_and(
-        kk == 0,
-        jnp.logical_or(i == 0,
-                       rank_ref[i] != rank_ref[jnp.maximum(i - 1, 0)]),
-    )
+    # Segmented launch (unique_ranks): every step owns its own output
+    # slot, so the only revisit is the k-tile sweep. Legacy layout:
+    # first block of the rank AND first k-tile; ranks are non-decreasing.
+    # (Under block_outer ranks are unique, so the rank test is always
+    # true for i > 0 and `first` reduces to kk == 0 — correct for every
+    # (i, j).)
+    if unique_ranks:
+        first = kk == 0
+    else:
+        first = jnp.logical_and(
+            kk == 0,
+            jnp.logical_or(i == 0,
+                           rank_ref[i] != rank_ref[jnp.maximum(i - 1, 0)]),
+        )
 
     @pl.when(first)
     def _():
@@ -97,14 +116,17 @@ def _kernel(rank_ref, vals_ref, cols_ref, b_ref, out_ref, *, block_axis):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_active", "nt", "kt", "grid_order", "interpret"))
+    static_argnames=("n_active", "nt", "kt", "grid_order", "unique_ranks",
+                     "interpret"))
 def spmm_mxu(tc_vals, tc_cols, tc_rank, b, *, n_active: int, nt: int = 128,
              kt: int | None = None, grid_order: str = "n_outer",
-             interpret: bool = True):
+             unique_ranks: bool = False, interpret: bool = True):
     """Compacted TC-path partial output, shape ``(n_active * 8, n)``.
 
     Args:
-      tc_vals: (nb, 8, bk) f32 condensed blocks (zero padded).
+      tc_vals: (nb, 8, bk) f32 condensed blocks (zero padded). Under the
+        segmented launch a "block" is one §4.3 segment — ``bk`` is then
+        ``ts · bk`` flattened condensed vectors of a single window.
       tc_cols: (nb, bk) i32 source column of each condensed vector.
       tc_rank: (nb,) i32 *non-decreasing* compacted window ranks.
       b: (k, n) dense matrix; n must be a multiple of ``nt`` and k a
@@ -112,7 +134,10 @@ def spmm_mxu(tc_vals, tc_cols, tc_rank, b, *, n_active: int, nt: int = 128,
       n_active: number of distinct ranks (compacted output height / 8).
       kt: B k-tile rows per grid step (defaults to all of k resident).
       grid_order: "n_outer" (always legal) or "block_outer" (requires
-        one block per rank, i.e. ``nb == n_active`` — caller enforces).
+        one block per rank, i.e. ``nb == n_active`` — caller enforces;
+        always true for the segmented launch).
+      unique_ranks: every block owns its own rank (the segmented launch
+        table guarantees this) — skips the rank-boundary carry test.
     """
     nb, _, bk = tc_vals.shape
     k, n = b.shape
@@ -120,6 +145,7 @@ def spmm_mxu(tc_vals, tc_cols, tc_rank, b, *, n_active: int, nt: int = 128,
     assert n % nt == 0, (n, nt)
     assert k % kt == 0, (k, kt)
     assert grid_order in GRID_ORDERS, grid_order
+    assert not unique_ranks or nb == n_active, (nb, n_active)
 
     if grid_order == "n_outer":
         grid = (n // nt, nb, k // kt)
@@ -139,7 +165,8 @@ def spmm_mxu(tc_vals, tc_cols, tc_rank, b, *, n_active: int, nt: int = 128,
         out_map = lambda i, j, kk, r: (r[i], 0, j)  # noqa: E731
 
     out = pl.pallas_call(
-        functools.partial(_kernel, block_axis=block_axis),
+        functools.partial(_kernel, block_axis=block_axis,
+                          unique_ranks=unique_ranks),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,

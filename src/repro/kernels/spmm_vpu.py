@@ -16,10 +16,19 @@ Single-pass edition:
   outside the current k-tile are masked to zero, so every non-zero is
   counted exactly once across the k sweep.
 
-Tiles write *partials*; the single fused scatter-accumulate in ops.py
-plays the role of atomicAdd (tiles are row-sorted by preprocessing, and on
-TPU the one deterministic scatter replaces the paper's short/long-tile
-store-vs-atomic split of §4.3 bitwise-reproducibly).
+**Segment-granular launch (§4.3 Cs decomposition).** The preferred
+operand layout is the hybrid balancer's segment table: one grid step
+owns one *segment* of ≤ ``Cs`` residual elements (whole tiles) of a
+single row — the same kernel, a wider tile — so long power-law rows are
+split across bounded grid steps and short rows don't pad up to the cap
+(the table is ragged-last). Segments write *partials*; the single fused
+scatter-accumulate in ops.py plays the role of atomicAdd (segments are
+row-sorted by preprocessing, and on TPU the one deterministic scatter
+replaces the paper's short/long-tile store-vs-atomic split of §4.3
+bitwise-reproducibly: atomic segments — decomposed rows, or rows whose
+window also has TC work — share scatter rows with another producer;
+non-atomic segments own theirs exclusively and the add degenerates to a
+store).
 
 ``grid_order`` (tuner-selected) permutes the two outer grid dimensions:
 ``"n_outer"`` walks all tiles per n-tile (tile vals re-fetched per

@@ -38,7 +38,7 @@ import tempfile
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import TuneConfig
 
-CACHE_VERSION = 2  # v2: TuneConfig gained xt (SDDMM X-row panel streaming)
+CACHE_VERSION = 3  # v3: TuneConfig gained ts/cs (§4.3 segment caps)
 _ENV_VAR = "REPRO_TUNE_CACHE_DIR"
 _ENV_MAX = "REPRO_TUNE_CACHE_MAX"
 DEFAULT_MAX_ENTRIES = 512

@@ -70,6 +70,12 @@ class TuneConfig:
     threshold: int | None = None  # TC/VPU split (None = operator default)
     bk: int | None = None    # condensed block depth (None = operator default)
     ts_tile: int | None = None    # VPU tile width (None = operator default)
+    # Hybrid load balancing caps (paper §4.3 Ts/Cs): ``ts`` TC blocks per
+    # MXU segment and ``cs`` VPU elements per row-segment bound the work
+    # one grid step does. None = operator default (segmentation on);
+    # 0 disables segmentation (the pre-§4.3 per-block/per-tile launch).
+    ts: int | None = None
+    cs: int | None = None
     grid_order: str = "n_outer"   # SpMM grid order (see kernel docstrings)
     source: str = "default"  # default | model | search | cache
 
@@ -139,21 +145,44 @@ def _itemsize(dtype) -> int:
     return int(np.dtype(dtype).itemsize)
 
 
+def _seg_widths(cfg: TuneConfig, *, bk: int, ts_tile: int) -> tuple[int, int]:
+    """Effective per-grid-step work widths under the §4.3 segment caps:
+    condensed vectors per MXU segment (``ts`` blocks × ``bk``) and VPU
+    elements per row-segment (``cs`` rounded down to whole tiles).
+    ``ts``/``cs`` of 0 disable segmentation (one block / one tile per
+    step — the legacy launch)."""
+    from repro.core.balance import BalanceParams
+
+    dflt = BalanceParams()
+    seg_ts = dflt.ts if cfg.ts is None else cfg.ts
+    seg_cs = dflt.cs if cfg.cs is None else cfg.cs
+    mxu_vecs = max(1, seg_ts) * bk
+    vpu_els = max(1, seg_cs // max(ts_tile, 1)) * ts_tile
+    return mxu_vecs, vpu_els
+
+
 def vmem_spmm_bytes(cfg: TuneConfig, *, bk: int, ts: int,
                     dtype=np.float32) -> int:
     """Resident bytes of one pipelined grid step, max over the two
     SpMM kernels (the streams are scheduled independently).
 
     Streamed input blocks are double-buffered (×2); the revisited output
-    block is single-buffered (it is the accumulator carry).
+    block is single-buffered (it is the accumulator carry). ``ts`` here
+    is the VPU *tile width* (``ts_tile``); the §4.3 segment caps
+    (``cfg.ts``/``cfg.cs``) widen the per-step operands and the gathered
+    B-row scratch, which this model charges for.
     """
     it = _itemsize(dtype)
     kt, nt = cfg.kt, cfg.nt
-    # MXU step: TC block vals (8, bk) + cols (bk,) + B panel (kt, nt),
-    # output (8, nt) accumulator.
-    mxu = 2 * (WINDOW * bk * it + bk * 4 + kt * nt * it) + WINDOW * nt * it
-    # VPU step: tile vals/cols (ts,) each + B panel (kt, nt), output (nt,).
-    vpu = 2 * (2 * ts * 4 + kt * nt * it) + nt * it
+    mxu_vecs, vpu_els = _seg_widths(cfg, bk=bk, ts_tile=ts)
+    # MXU step: segment vals (8, ts·bk) + cols (ts·bk,) + B panel
+    # (kt, nt), gathered-rows scratch (ts·bk, nt), output (8, nt).
+    mxu = 2 * (WINDOW * mxu_vecs * it + mxu_vecs * 4 + kt * nt * it) \
+        + mxu_vecs * nt * it + WINDOW * nt * it
+    # VPU step: segment vals/cols (cs,) each + B panel (kt, nt),
+    # gathered-rows scratch (cs, nt), output (nt,).
+    vpu = 2 * (2 * vpu_els * 4 + kt * nt * it) \
+        + vpu_els * nt * it + nt * it
     return max(mxu, vpu)
 
 
@@ -171,9 +200,11 @@ def vmem_sddmm_bytes(cfg: TuneConfig, *, bk: int, ts: int, m_rows: int,
     kf = cfg.kf_tile
     yt = kcols if cfg.yt is None else min(cfg.yt, kcols)
     xt = m_rows if cfg.xt is None else min(cfg.xt, m_rows)
-    mxu = 2 * (WINDOW * kf * it + yt * kf * it + 2 * bk * 4) \
-        + WINDOW * bk * it
-    vpu = 2 * (xt * kf * it + yt * kf * it + 2 * ts * 4) + ts * it
+    mxu_vecs, vpu_els = _seg_widths(cfg, bk=bk, ts_tile=ts)
+    mxu = 2 * (WINDOW * kf * it + yt * kf * it + 2 * mxu_vecs * 4) \
+        + mxu_vecs * kf * it + WINDOW * mxu_vecs * it
+    vpu = 2 * (xt * kf * it + yt * kf * it + 2 * vpu_els * 4) \
+        + 2 * vpu_els * kf * it + vpu_els * it
     return max(mxu, vpu)
 
 
@@ -210,13 +241,16 @@ def _modeled_spmm_time(feat: MatrixFeatures, threshold: int, *, n: int,
     return max(t_mxu, t_vpu) + 1e-12
 
 
-def _modeled_sddmm_time(feat: MatrixFeatures, threshold: int, *, kf: int,
-                        bk: int, hw: HardwareModel) -> float:
-    """Roofline time of the SDDMM block split at ``threshold`` nnz/block.
+def sddmm_window_split(feat: MatrixFeatures, threshold: int, bk: int
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-window SDDMM TC/VPU split approximation, shared by the cost
+    model and the dist partitioner's segment curve (so shard balancing
+    follows the same split the per-shard plans will use).
 
     SDDMM distributes at 8×bk-block granularity (densest-first packing):
     approximate each window's candidate blocks by packing its vectors
-    densest-first and keeping blocks with ≥ threshold nnz on the MXU.
+    densest-first and keeping blocks with ≥ ``threshold`` mean nnz on
+    the MXU. Returns ``(tc_mask, nblk_w, nnz_w)`` per window.
     """
     hist = feat.win_vec_hist
     counts = np.arange(WINDOW + 1)
@@ -225,7 +259,14 @@ def _modeled_sddmm_time(feat: MatrixFeatures, threshold: int, *, kf: int,
     nblk_w = np.ceil(nvec_w / bk)
     with np.errstate(divide="ignore", invalid="ignore"):
         mean_blk_nnz = np.where(nblk_w > 0, nnz_w / np.maximum(nblk_w, 1), 0)
-    tc_mask = mean_blk_nnz >= threshold
+    return mean_blk_nnz >= threshold, nblk_w, nnz_w
+
+
+def _modeled_sddmm_time(feat: MatrixFeatures, threshold: int, *, kf: int,
+                        bk: int, hw: HardwareModel) -> float:
+    """Roofline time of the SDDMM block split at ``threshold`` nnz/block
+    (see :func:`sddmm_window_split` for the split approximation)."""
+    tc_mask, nblk_w, nnz_w = sddmm_window_split(feat, threshold, bk)
     nblk = int(nblk_w[tc_mask].sum())
     tc_nnz = int(nnz_w[tc_mask].sum())
     vpu_nnz = feat.nnz - tc_nnz
@@ -249,6 +290,60 @@ def _pick_tiles(fits, *candidate_lists):
         if fits(*combo):
             return combo
     return tuple(c[-1] for c in candidate_lists)
+
+
+_TS_SEG_CANDIDATES = (1, 2, 4, 8, 16, 32)
+_SPT_CANDIDATES = (1, 2, 4, 8)   # VPU tiles per segment (cs / ts_tile)
+# Grid-step overhead in units of one block/tile of work. Each step pays
+# a fixed scheduling/DMA-issue cost on top of its payload; the cost of a
+# cap is ``nseg·(overhead + cap)`` — padded work plus per-step overhead
+# — so heavy owners merge (a window of ~8 real blocks becomes one step)
+# while 1-unit owners keep cap 1 and never pad. Measured ≈ one
+# block/tile of work per step on the interpret substrate.
+_SEG_STEP_OVERHEAD = 1
+
+
+def _pick_seg_ts(feat: MatrixFeatures, threshold: int | None,
+                 bk: int) -> int:
+    """§4.3 Ts cap from the blocks/window histogram: minimize the modeled
+    MXU sweep cost ``nseg · (overhead + ts)``. A wide cap amortizes
+    per-step overhead across decomposed (power-law) windows; a narrow one
+    avoids padding 1-block windows up to the cap."""
+    from repro.core.balance import BalanceParams
+
+    vec_ge = feat.vectors_at_least(threshold or 1) \
+        if feat.win_vec_hist.size else np.zeros(0, np.int64)
+    blocks_w = -(-vec_ge // bk)
+    blocks_w = blocks_w[blocks_w > 0]
+    if blocks_w.size == 0:
+        return BalanceParams().ts
+    best, best_cost = _TS_SEG_CANDIDATES[0], None
+    for ts in _TS_SEG_CANDIDATES:
+        nseg = int(np.ceil(blocks_w / ts).sum())
+        cost = nseg * (_SEG_STEP_OVERHEAD + ts)
+        if best_cost is None or cost < best_cost:
+            best, best_cost = ts, cost
+    return best
+
+
+def _pick_seg_cs(feat: MatrixFeatures, ts_tile: int) -> int:
+    """§4.3 Cs cap (whole VPU tiles per row-segment) from the nnz/row
+    histogram — residual rows are never longer than their source rows, so
+    the row histogram upper-bounds tiles per row."""
+    from repro.core.balance import BalanceParams
+
+    rows = feat.row_hist[feat.row_hist > 0] if feat.row_hist.size \
+        else np.zeros(0, np.int64)
+    if rows.size == 0:
+        return BalanceParams().cs
+    tiles_r = np.ceil(rows / max(ts_tile, 1))
+    best, best_cost = _SPT_CANDIDATES[0], None
+    for spt in _SPT_CANDIDATES:
+        nseg = int(np.ceil(tiles_r / spt).sum())
+        cost = nseg * (_SEG_STEP_OVERHEAD + spt)
+        if best_cost is None or cost < best_cost:
+            best, best_cost = spt, cost
+    return best * ts_tile
 
 
 def _pick_ts_tile(feat: MatrixFeatures) -> int:
@@ -287,30 +382,46 @@ def model_tune_spmm(a: SparseCSR, *, n: int = 128, dtype=np.float32,
                  for t in cand}
         threshold = min(times, key=lambda t: (times[t], t))
 
+    # §4.3 segment caps from the blocks/window and nnz/row histograms.
+    seg_ts = _pick_seg_ts(feat, threshold, bk)
+    seg_cs = _pick_seg_cs(feat, ts_tile)
+
     # Tile sizing: largest (kt, nt) whose pipelined step fits the budget.
     # kt beyond k buys nothing (ops clamps); nt beyond n likewise.
     kts = [c for c in _KT_CANDIDATES if c <= max(a.k, _KT_CANDIDATES[-1])]
     nts = [c for c in _NT_CANDIDATES if c <= max(n, _NT_CANDIDATES[-1])]
 
     def fits(kt, nt):
-        cfg = TuneConfig(kt=kt, nt=nt)
+        cfg = TuneConfig(kt=kt, nt=nt, ts=seg_ts, cs=seg_cs)
         return vmem_spmm_bytes(cfg, bk=bk, ts=ts_tile, dtype=dtype) <= budget
 
     kt, nt = _pick_tiles(fits, kts, nts)
+    # Still over budget at the smallest tiles ⇒ narrow the segment caps
+    # before warning (a segment's gathered-rows scratch scales with
+    # them), then re-pick tiles: the narrowed caps may re-admit large
+    # kt/nt candidates that the original caps crowded out.
+    if not fits(kt, nt):
+        while not fits(kt, nt) and seg_ts > 1:
+            seg_ts //= 2
+        while not fits(kt, nt) and seg_cs > ts_tile:
+            seg_cs //= 2
+        kt, nt = _pick_tiles(fits, kts, nts)
 
     # Grid order: block_outer fetches each TC block's values once instead
-    # of once per n-tile, but requires one block per active window (the
-    # consecutive-output-revisit contract). That holds iff no window has
-    # more than bk vectors above the threshold.
+    # of once per n-tile. On the segmented launch every segment owns its
+    # own compacted output slot, so it is always legal; unsegmented it
+    # requires one block per active window (no window with more than bk
+    # vectors above the threshold — the consecutive-revisit contract).
     max_vec = int(feat.vectors_at_least(threshold or 1).max()) \
         if feat.win_vec_hist.size else 0
     multi_ntile = n > nt
     grid_order = ("block_outer"
-                  if multi_ntile and 0 < max_vec <= bk else "n_outer")
+                  if multi_ntile and (seg_ts > 0 or 0 < max_vec <= bk)
+                  else "n_outer")
 
     cfg = TuneConfig(kt=kt, nt=nt, threshold=threshold, bk=bk,
-                     ts_tile=ts_tile, grid_order=grid_order,
-                     source="model")
+                     ts_tile=ts_tile, ts=seg_ts, cs=seg_cs,
+                     grid_order=grid_order, source="model")
     step = vmem_spmm_bytes(cfg, bk=bk, ts=ts_tile, dtype=dtype)
     if step > budget:  # smallest candidates still don't fit
         warnings.warn(
@@ -345,6 +456,11 @@ def model_tune_sddmm(a: SparseCSR, *, kf: int = 128, dtype=np.float32,
                  for t in cand}
         threshold = min(times, key=lambda t: (times[t], t))
 
+    # §4.3 segment caps (same histograms as SpMM; SDDMM VPU tiles are
+    # flat element lists, so cs only batches tiles per grid step there).
+    seg_ts = _pick_seg_ts(feat, 1, bk)
+    seg_cs = _pick_seg_cs(feat, ts_tile)
+
     kfs = [c for c in _KF_CANDIDATES if c <= max(kf, _KF_CANDIDATES[-1])]
     yts = [c for c in _YT_CANDIDATES if c <= max(a.k, _YT_CANDIDATES[-1])]
     xts = [c for c in _XT_CANDIDATES if c <= max(a.m, _XT_CANDIDATES[-1])]
@@ -353,14 +469,22 @@ def model_tune_sddmm(a: SparseCSR, *, kf: int = 128, dtype=np.float32,
     # panel (shared by both kernels), then a wider feature tile, then a
     # bigger X panel (VPU-only).
     def fits(yt_c, kf_c, xt_c):
-        cfg = TuneConfig(kf_tile=kf_c, yt=yt_c, xt=xt_c)
+        cfg = TuneConfig(kf_tile=kf_c, yt=yt_c, xt=xt_c,
+                         ts=seg_ts, cs=seg_cs)
         return vmem_sddmm_bytes(cfg, bk=bk, ts=ts_tile, m_rows=a.m,
                                 kcols=a.k, dtype=dtype) <= budget
 
     yt, kf_tile, xt = _pick_tiles(fits, yts, kfs, xts)
+    if not fits(yt, kf_tile, xt):
+        while not fits(yt, kf_tile, xt) and seg_ts > 1:
+            seg_ts //= 2
+        while not fits(yt, kf_tile, xt) and seg_cs > ts_tile:
+            seg_cs //= 2
+        yt, kf_tile, xt = _pick_tiles(fits, yts, kfs, xts)
 
     cfg = TuneConfig(kf_tile=kf_tile, yt=yt, xt=xt, threshold=threshold,
-                     bk=bk, ts_tile=ts_tile, source="model")
+                     bk=bk, ts_tile=ts_tile, ts=seg_ts, cs=seg_cs,
+                     source="model")
     step = vmem_sddmm_bytes(cfg, bk=bk, ts=ts_tile, m_rows=a.m, kcols=a.k,
                             dtype=dtype)
     if step > budget:

@@ -89,11 +89,29 @@ def spmm_candidates(a: SparseCSR, *, n: int, mode: str,
                 cands.append(model.replace(kt=kt))
         if model.grid_order == "block_outer":
             cands.append(model.replace(grid_order="n_outer"))
+        cands.extend(_seg_cap_perturbations(model))
     if threshold is None and mode == "hybrid" and model.threshold is not None:
         for t in (model.threshold - 1, model.threshold + 1):
             if 1 <= t <= 9:
                 cands.append(model.replace(threshold=t))
     return _dedup(cands)
+
+
+def _seg_cap_perturbations(model: TuneConfig) -> list[TuneConfig]:
+    """§4.3 Ts/Cs cap perturbations around the model's pick. Segment
+    caps re-layout the plan (the launch tables change), so they only
+    matter where the executable iterates them — the Pallas backend."""
+    out = []
+    if model.ts is not None and model.ts > 0:
+        for ts in (max(model.ts // 2, 1), min(model.ts * 2, 64)):
+            if ts != model.ts:
+                out.append(model.replace(ts=ts))
+    if model.cs is not None and model.cs > 0:
+        tile = model.ts_tile or 32
+        for cs in (max(model.cs // 2, tile), min(model.cs * 2, 16 * tile)):
+            if cs != model.cs:
+                out.append(model.replace(cs=cs))
+    return out
 
 
 def sddmm_candidates(a: SparseCSR, *, kf: int, mode: str,
@@ -116,6 +134,7 @@ def sddmm_candidates(a: SparseCSR, *, kf: int, mode: str,
             cands.append(model.replace(yt=model.yt // 2))
         if model.xt is not None and model.xt // 2 >= 8:
             cands.append(model.replace(xt=model.xt // 2))
+        cands.extend(_seg_cap_perturbations(model))
     if threshold is None and mode == "hybrid" and model.threshold is not None:
         for t in (max(model.threshold // 2, 1), model.threshold * 2):
             cands.append(model.replace(threshold=t))

@@ -1,0 +1,93 @@
+"""The bench-regression CI gate: bar parsing, tolerance semantics, and
+the hand-lowered-bar failure demonstration (a baseline whose committed
+bar exceeds the fresh measurement by more than the tolerance must fail
+the job)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.check_regression import compare, load_bars, parse_bar
+
+
+def test_parse_bar_formats():
+    assert parse_bar("x0.62") == 0.62
+    assert parse_bar("thr2_kt512_nt128_vmem518KB_x1.37") == 1.37
+    assert parse_bar("0.42x") == 0.42
+    assert parse_bar("ts4_steps64of256_x2.51") == 2.51
+    assert parse_bar("1.62GF") is None
+    assert parse_bar("51316602B") is None
+    assert parse_bar("True_int_valued_9mats") is None
+    assert parse_bar("steps256") is None
+
+
+def _write(path, rows):
+    with open(path, "w") as f:
+        json.dump(rows, f)
+
+
+def test_load_bars_filters_ratio_rows(tmp_path):
+    p = tmp_path / "BENCH_t.json"
+    _write(p, [
+        {"name": "t/a", "us_per_call": 1.0, "derived": "x1.50"},
+        {"name": "t/b", "us_per_call": 1.0, "derived": "3.10GF"},
+        {"name": "t/c", "us_per_call": 0.0, "derived": "0.42x"},
+    ])
+    assert load_bars(str(p)) == {"t/a": 1.5, "t/c": 0.42}
+
+
+def test_compare_tolerance_semantics():
+    base = {"a": 2.0, "b": 1.0, "gone": 3.0}
+    fresh = {"a": 1.71, "b": 0.84, "new": 9.0}
+    fails, lines = compare(base, fresh, tolerance=0.15)
+    # a: 1.71 >= 2.0*0.85 -> ok; b: 0.84 < 0.85 -> fail
+    assert fails == ["b"]
+    assert any("gone" in ln and "missing" in ln for ln in lines)
+    assert any(ln.startswith("  + new") for ln in lines)
+    # improvements never fail
+    assert compare({"a": 1.0}, {"a": 5.0}, 0.15)[0] == []
+
+
+@pytest.mark.parametrize("lowered", [False, True])
+def test_cli_gate_fails_on_hand_lowered_bar(tmp_path, lowered):
+    """End-to-end CLI check: with an honest fresh run the gate passes;
+    hand-lowering a fresh bar below the floor makes it exit 1."""
+    base_dir = tmp_path / "base"
+    fresh_dir = tmp_path / "fresh"
+    base_dir.mkdir()
+    fresh_dir.mkdir()
+    rows = [{"name": "spmm/m/hybrid", "us_per_call": 10.0,
+             "derived": "x2.00"},
+            {"name": "spmm/gmean", "us_per_call": 0.0, "derived": "1.40x"}]
+    _write(base_dir / "BENCH_spmm.json", rows)
+    fresh_rows = [dict(r) for r in rows]
+    if lowered:
+        fresh_rows[0]["derived"] = "x1.00"  # 50% drop > 15% tolerance
+    _write(fresh_dir / "BENCH_spmm.json", fresh_rows)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--baseline-dir", str(base_dir), "--fresh-dir", str(fresh_dir),
+         "--suites", "spmm", "--min-bars", "2"],
+        capture_output=True, text=True,
+    )
+    if lowered:
+        assert proc.returncode == 1, proc.stdout
+        assert "REGRESSION: spmm/m/hybrid" in proc.stdout
+    else:
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_min_bars_guard(tmp_path):
+    (tmp_path / "b").mkdir()
+    (tmp_path / "f").mkdir()
+    _write(tmp_path / "b" / "BENCH_spmm.json", [])
+    _write(tmp_path / "f" / "BENCH_spmm.json", [])
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--baseline-dir", str(tmp_path / "b"),
+         "--fresh-dir", str(tmp_path / "f"), "--suites", "spmm"],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 1
+    assert "min-bars" in proc.stdout
