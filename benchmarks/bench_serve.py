@@ -80,6 +80,25 @@ def run() -> list[tuple]:
                  f"occ{st['bucket_occupancy']:.2f}_hit"
                  f"{st['exec_cache_hits']}_miss{st['exec_cache_misses']}"))
 
+    # --- resilience hot-path tax: the identical fault-free mix through
+    #     the bare engine (ladder/breakers off) vs the default resilient
+    #     engine. The regression gate holds this bar ≥0.85 so the
+    #     resilience layer can never silently tax the fast path >15%.
+    def mix_through(eng):
+        def go():
+            for name, b in reqs:
+                eng.submit(name, "spmm", b=b)
+            return {rid: np.asarray(v) for rid, v in eng.flush().items()}
+
+        go()                            # warm-up round
+        return timeit(go)
+
+    t_plain = mix_through(SparseEngine(registry, max_queue=512,
+                                       resilience=False))
+    t_res = mix_through(SparseEngine(registry, max_queue=512))
+    rows.append(("serve/fastpath_overhead", t_res * 1e6,
+                 f"x{t_plain / t_res:.2f}_vs_plain"))
+
     # --- bit-identity of the served mix (the serving contract)
     served = engined()
     ok = all(

@@ -10,9 +10,9 @@
 # never fail the gate (new rows land with their first commit).
 #
 # Usage (the ``bench-regression`` CI job):
-#   python -m benchmarks.run --only fig1,spmm,sddmm --json-dir fresh
+#   python -m benchmarks.run --only fig1,spmm,sddmm,serve --json-dir fresh
 #   python -m benchmarks.check_regression --baseline-dir . \
-#       --fresh-dir fresh --suites fig1,spmm,sddmm
+#       --fresh-dir fresh --suites fig1,spmm,sddmm,serve
 from __future__ import annotations
 
 import argparse
@@ -73,7 +73,7 @@ def main() -> None:
     ap.add_argument("--fresh-dir", required=True,
                     help="directory a fresh `benchmarks.run --json-dir` "
                          "wrote to")
-    ap.add_argument("--suites", default="fig1,spmm,sddmm",
+    ap.add_argument("--suites", default="fig1,spmm,sddmm,serve",
                     help="comma-separated suite names to gate")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="allowed fractional drop per bar (default 0.15)")

@@ -15,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig1,spmm,sddmm,"
-                         "ablations,gnn,roofline,dist,serve)")
+                         "ablations,gnn,roofline,dist,serve,chaos)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON: "
                          "[{name, us_per_call, derived}, ...]")
@@ -25,6 +25,7 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (
         bench_ablations,
+        bench_chaos,
         bench_dist,
         bench_fig1_nnz1,
         bench_gnn_e2e,
@@ -43,6 +44,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "dist": bench_dist.run,
         "serve": bench_serve.run,
+        "chaos": bench_chaos.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     unknown = only - set(suites)

@@ -9,6 +9,14 @@ node-scoring round through :class:`~repro.serve.gnn_service.GNNService`
 — and prints the serving stats (throughput, padding waste, bucket
 occupancy, cache hits).
 
+A fourth "chaotic" tenant then demonstrates the resilience layer: its
+requests carry deadlines, and an injected
+:class:`~repro.serve.faults.FaultPlan` crashes the fast packed apply —
+the engine degrades down the bit-equivalent ladder (packed → singles →
+unsegmented → xla), the expired request is dropped with a typed
+``DeadlineExceeded`` result, and ``engine.health()`` shows the
+breaker/degradation accounting.
+
     PYTHONPATH=src python examples/serve_sparse.py
 """
 import numpy as np
@@ -16,7 +24,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import gnn as mgnn
-from repro.serve import GNNService, GraphRegistry, SparseEngine
+from repro.serve import (
+    FaultPlan,
+    FaultRule,
+    GNNService,
+    GraphRegistry,
+    ServeError,
+    SparseEngine,
+)
 from repro.sparse.generate import mixed_csr, power_law_csr
 
 
@@ -65,6 +80,40 @@ def main() -> None:
     print(f"gcn scores for 10 nodes, 2 concurrent requests: "
           f"{np.asarray(scores[s1])[0, :4].round(3).tolist()} ...")
     assert scores[s2].shape == (10, 16)
+
+    # --- tenant D: deadlines + an injected fast-path fault. The engine
+    #     is resilient by default; the fault plan makes the packed apply
+    #     crash once, so the bucket degrades to per-request singles
+    #     (bit-identical results), while a request admitted with an
+    #     already-hopeless deadline is dropped with a typed result.
+    plan = FaultPlan([FaultRule(kth=1, graph="tenantB/fem", op="spmm",
+                                strategy="fast")])
+    engine.faults = plan
+    good = [engine.submit("tenantB/fem", "spmm",
+                          b=jnp.asarray(rng.standard_normal(
+                              (fem.k, 64)).astype(np.float32)),
+                          deadline_ms=10_000.0) for _ in range(3)]
+    import time as _time
+
+    doomed = engine.submit("tenantB/fem", "spmm",
+                           b=jnp.asarray(rng.standard_normal(
+                               (fem.k, 64)).astype(np.float32)),
+                           deadline_ms=0.5)
+    _time.sleep(0.005)                       # let the tight deadline die
+    out = engine.flush()
+    engine.faults = None
+    assert all(not isinstance(out[r], ServeError) for r in good)
+    assert isinstance(out[doomed], ServeError)
+    print(f"\nchaotic tenant: {len(good)} requests survived an injected "
+          f"fast-path crash (served degraded), 1 dropped: "
+          f"{out[doomed].reason}")
+    h = engine.health()
+    print("--- engine health ---")
+    print(f"{'breakers':>20}: "
+          f"{ {k: v['state'] for k, v in h['breakers'].items()} }")
+    print(f"{'degraded_served':>20}: {h['degraded_served']}")
+    print(f"{'failures':>20}: {h['failures']}")
+    print(f"{'deadline':>20}: {h['deadline']}")
 
     st = engine.stats()
     print("\n--- engine stats ---")

@@ -62,17 +62,60 @@ from repro.kernels.spmm_vpu import spmm_vpu
 from repro.tune.model import DEFAULT_TUNE, TuneConfig
 
 
+class ApplyError(RuntimeError):
+    """Classified failure on the AOT apply path.
+
+    ``stage`` says *where* it died — ``"compile"`` (lower/compile of a
+    new executable; the cache entry is never installed, so a later
+    retry re-attempts the compile) or ``"execute"`` — and ``cause`` is
+    the original exception. Serving's degradation ladder keys its
+    failure histograms off :func:`classify_apply_error`.
+    """
+
+    def __init__(self, stage: str, key, cause: BaseException):
+        super().__init__(f"{stage} failed for apply key {key!r}: {cause}")
+        self.stage = stage
+        self.key = key
+        self.cause = cause
+
+
+def classify_apply_error(exc: BaseException) -> str:
+    """Map an apply-path exception to a short failure class:
+    ``compile`` | ``resource`` | ``injected`` | ``nonfinite`` |
+    ``runtime``. Duck-typed (name/message heuristics for XLA's
+    RESOURCE_EXHAUSTED family) so callers never import backend guts."""
+    if isinstance(exc, ApplyError):
+        return exc.stage if exc.stage != "execute" else \
+            classify_apply_error(exc.cause)
+    kind = getattr(exc, "kind", None)       # serve.faults.InjectedFault
+    if kind in ("raise", "resource"):
+        return "resource" if kind == "resource" else "injected"
+    name = type(exc).__name__.lower()
+    msg = str(exc).lower()
+    if "resource" in name or "resource_exhausted" in msg \
+            or "out of memory" in msg:
+        return "resource"
+    if "nonfinite" in name or "non-finite" in msg:
+        return "nonfinite"
+    return "runtime"
+
+
 def cached_compile(cache: dict, key, lower):
     """Per-operator AOT apply cache: one compiled executable per key.
 
     Repeated calls invoke the executable directly, skipping jit dispatch
     and re-tracing; plan arrays stay call arguments (one device copy,
     never baked into the executable as constants). ``lower`` is a thunk
-    returning the lowered-but-uncompiled computation.
+    returning the lowered-but-uncompiled computation. Compile failures
+    surface as :class:`ApplyError` (stage ``"compile"``) with nothing
+    installed in the cache.
     """
     fn = cache.get(key)
     if fn is None:
-        fn = cache[key] = lower().compile()
+        try:
+            fn = cache[key] = lower().compile()
+        except Exception as exc:
+            raise ApplyError("compile", key, exc) from exc
     return fn
 
 

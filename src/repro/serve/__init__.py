@@ -16,14 +16,24 @@ from __future__ import annotations
 
 _LAZY = {
     "AdmissionError": "repro.serve.engine",
+    "CircuitBreaker": "repro.serve.resilience",
     "ContinuousBatcher": "repro.serve.batching",
+    "DeadlineExceeded": "repro.serve.resilience",
+    "ExecutionFailed": "repro.serve.resilience",
+    "FaultPlan": "repro.serve.faults",
+    "FaultRule": "repro.serve.faults",
     "GNNService": "repro.serve.gnn_service",
     "GraphRegistry": "repro.serve.registry",
+    "InjectedFault": "repro.serve.faults",
     "RegisteredGraph": "repro.serve.registry",
     "Request": "repro.serve.batching",
+    "ResiliencePolicy": "repro.serve.resilience",
+    "ServeError": "repro.serve.resilience",
+    "SimulatedResourceExhausted": "repro.serve.faults",
     "SparseEngine": "repro.serve.engine",
     "SparseRequest": "repro.serve.engine",
     "as_csr": "repro.serve.registry",
+    "corrupt_cache_entry": "repro.serve.faults",
     "run_to_completion": "repro.serve.batching",
 }
 

@@ -38,26 +38,56 @@ the bucket width, which quantizes the compute width exactly the way a
 direct call on the padded panel would.
 
 Admission control is host-side and explicit: unknown graphs, missing
-operators, over-wide panels, shape mismatches, and queue overflow are
-rejected at ``submit`` with a typed :class:`AdmissionError`, never
-discovered at execution time. ``stats()`` surfaces throughput, padding
-waste, bucket occupancy, and executable/plan-cache hit counters.
+operators, over-wide panels, shape mismatches, queue overflow, and
+infeasible deadlines are rejected at ``submit`` with a typed
+:class:`AdmissionError`, never discovered at execution time.
+
+Resilience (see :mod:`repro.serve.resilience`): ``flush`` maps every
+admitted rid to its result **or** a typed
+:class:`~repro.serve.resilience.ServeError` — one failing bucket never
+discards the results of buckets that already executed. With a
+:class:`~repro.serve.resilience.ResiliencePolicy` (the default), an
+executable failure walks the degradation ladder
+``fast → single → unsegmented → xla`` with capped-backoff retries (the
+``single`` rung re-executes the chunk per request, so one poison
+submission fails alone), per-(graph, op) circuit breakers stop
+hammering a failing fast path and half-open probe it back, and requests
+already past their ``deadline_ms`` are dropped with a typed
+:class:`~repro.serve.resilience.DeadlineExceeded` instead of poisoning
+their packed chunk. ``flush_at_depth``/``flush_slack_ms`` auto-flush
+the queue host-side when it gets deep or a deadline gets close.
+``stats()`` surfaces throughput, padding waste, bucket occupancy, and
+executable/plan-cache hit counters; ``health()`` surfaces breaker
+states, per-reason reject counters, deadline-miss rate, and the
+retry/degradation histograms. A seeded
+:class:`~repro.serve.faults.FaultPlan` (``faults=``) makes any of it
+reproducibly fail on demand.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
+from collections import Counter, defaultdict
 
 import jax.numpy as jnp
 
+from repro.kernels.ops import classify_apply_error, sddmm_apply, spmm_apply
 from repro.serve.registry import GraphRegistry
+from repro.serve.resilience import (
+    CircuitBreaker,
+    DeadlineExceeded,
+    ExecutionFailed,
+    NonFiniteOutput,
+    ResiliencePolicy,
+    ServeError,
+    backoff_delay,
+)
 
 
 class AdmissionError(RuntimeError):
     """A request the engine refuses to queue; ``reason`` is one of
     ``queue_full | unknown_graph | op_unavailable | width_too_large |
-    bad_shape``."""
+    bad_shape | infeasible_deadline``."""
 
     def __init__(self, reason: str, detail: str = ""):
         super().__init__(f"{reason}: {detail}" if detail else reason)
@@ -75,6 +105,8 @@ class SparseRequest:
     bucket_width: int
     payload: tuple              # (b,) for spmm; (x, y) for sddmm
     edge_vals: jnp.ndarray | None = None
+    deadline_ms: float | None = None
+    deadline_at: float | None = None     # engine-clock absolute deadline
 
 
 def _pad_width(arr: jnp.ndarray, w: int) -> jnp.ndarray:
@@ -82,18 +114,42 @@ def _pad_width(arr: jnp.ndarray, w: int) -> jnp.ndarray:
     return arr if pad == 0 else jnp.pad(arr, ((0, 0), (0, pad)))
 
 
+def _strip_segments(arrs: dict) -> dict:
+    """The plan's unsegmented view: drop the §4.3 ``*_seg_*`` launch
+    tables so the apply falls back to the per-block/per-tile grid
+    (bit-identical — the segmented launch is verified inert)."""
+    return {k: v for k, v in arrs.items() if "_seg_" not in k}
+
+
 class SparseEngine:
-    """Admit → bucket → pack → execute → unpad/scatter."""
+    """Admit → bucket → pack → execute → unpad/scatter, resiliently."""
 
     def __init__(self, registry: GraphRegistry, *, max_queue: int = 256,
-                 max_panel: int | None = None):
+                 max_panel: int | None = None,
+                 resilience: ResiliencePolicy | bool = True,
+                 faults=None, flush_at_depth: int | None = None,
+                 flush_slack_ms: float | None = None,
+                 clock=time.monotonic, sleep=time.sleep):
         self.registry = registry
         self.max_queue = max_queue
         self.max_panel = (max(registry.panel_buckets)
                           if max_panel is None else max_panel)
+        # resilience=True (default) → default policy; False/None → the
+        # bare fast-path engine (failures still surface as typed
+        # per-request results, but no ladder, breakers, or validation).
+        self.policy: ResiliencePolicy | None = (
+            ResiliencePolicy() if resilience is True
+            else (resilience or None))
+        self.faults = faults
+        self.flush_at_depth = flush_at_depth
+        self.flush_slack_ms = flush_slack_ms
+        self._clock = clock
+        self._sleep = sleep
         self._queue: list[SparseRequest] = []
-        self._redeposited: dict[int, jnp.ndarray] = {}
+        self._redeposited: dict[int, jnp.ndarray | ServeError] = {}
         self._next_rid = 0
+        self._next_deadline: float | None = None
+        self._breakers: dict[tuple, CircuitBreaker] = {}
         self._stats = {
             "submitted": 0, "served": 0, "flushes": 0,
             "panels_executed": 0, "panel_slots": 0, "real_panels": 0,
@@ -102,6 +158,13 @@ class SparseEngine:
             "serve_time_s": 0.0,
         }
         self._rejected: dict[str, int] = defaultdict(int)
+        self._health = {
+            "deadline_submitted": 0, "deadline_misses": 0,
+            "retries": 0, "retry_hist": Counter(),
+            "degraded_served": Counter(), "failures": Counter(),
+            "breaker_skips": 0, "errors_returned": 0,
+            "autoflushes": Counter(),
+        }
 
     # -------------------------------------------------------- admission ---
     def _reject(self, reason: str, detail: str = "") -> None:
@@ -109,9 +172,16 @@ class SparseEngine:
         raise AdmissionError(reason, detail)
 
     def submit(self, graph: str, op: str, *, b=None, x=None, y=None,
-               edge_vals=None) -> int:
+               edge_vals=None, deadline_ms: float | None = None) -> int:
         """Admit one request; returns its rid (claim the result from the
-        dict :meth:`flush` returns) or raises :class:`AdmissionError`."""
+        dict :meth:`flush` returns) or raises :class:`AdmissionError`.
+
+        ``deadline_ms`` is a relative deadline on the engine clock: an
+        infeasible one (≤0, or below the policy's ``min_deadline_ms``)
+        is rejected here; a feasible one that still expires before its
+        bucket executes yields a typed
+        :class:`~repro.serve.resilience.DeadlineExceeded` result.
+        """
         if len(self._queue) >= self.max_queue:
             self._reject("queue_full", f"max_queue={self.max_queue}")
         try:
@@ -151,23 +221,62 @@ class SparseEngine:
         if wb is None:
             self._reject("width_too_large",
                          f"{width} > {self.registry.width_buckets[-1]}")
+        deadline_at = None
+        if deadline_ms is not None:
+            floor = self.policy.min_deadline_ms if self.policy else 0.0
+            if deadline_ms <= 0 or deadline_ms < floor:
+                self._reject("infeasible_deadline",
+                             f"deadline_ms={deadline_ms} (floor "
+                             f"{max(floor, 0.0)}ms)")
+            deadline_at = self._clock() + deadline_ms / 1e3
+            self._health["deadline_submitted"] += 1
+            if (self._next_deadline is None
+                    or deadline_at < self._next_deadline):
+                self._next_deadline = deadline_at
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(SparseRequest(rid, graph, op, width, wb, payload,
-                                         edge_vals))
+                                         edge_vals, deadline_ms,
+                                         deadline_at))
         self._stats["submitted"] += 1
+        self._maybe_autoflush()
         return rid
 
     @property
     def queue_depth(self) -> int:
         return len(self._queue)
 
+    def _maybe_autoflush(self) -> None:
+        """Host-side auto-flush triggers: queue depth, or the earliest
+        queued deadline within ``flush_slack_ms``. Results land in the
+        redeposit buffer, so the submitter's next :meth:`flush` returns
+        them as usual."""
+        kind = None
+        if (self.flush_at_depth is not None
+                and len(self._queue) >= self.flush_at_depth):
+            kind = "depth"
+        elif (self.flush_slack_ms is not None
+                and self._next_deadline is not None
+                and self._next_deadline - self._clock()
+                <= self.flush_slack_ms / 1e3):
+            kind = "deadline"
+        if kind is not None:
+            self._health["autoflushes"][kind] += 1
+            self.redeposit(self.flush())
+
     # -------------------------------------------------------- execution ---
-    def flush(self) -> dict[int, jnp.ndarray]:
+    def flush(self) -> dict[int, jnp.ndarray | ServeError]:
         """Serve everything queued; returns ``{rid: result}`` — plus any
         results a cooperative intermediary :meth:`redeposit`-ed for
-        their original submitter to claim."""
+        their original submitter to claim.
+
+        Per-request failures come back as typed
+        :class:`~repro.serve.resilience.ServeError` values in the same
+        dict: an exception mid-bucket never discards the results of
+        buckets (or sub-chunks) that already executed.
+        """
         pending, self._queue = self._queue, []
+        self._next_deadline = None
         results, self._redeposited = self._redeposited, {}
         if not pending:
             return results
@@ -186,7 +295,7 @@ class SparseEngine:
         self._stats["serve_time_s"] += time.perf_counter() - t0
         return results
 
-    def serve(self, submissions) -> dict[int, jnp.ndarray]:
+    def serve(self, submissions) -> dict[int, jnp.ndarray | ServeError]:
         """Convenience: submit a list of ``(graph, op, kwargs)`` tuples,
         then flush. Raises on the first inadmissible request. Results
         of other callers' queued requests are redeposited, not lost."""
@@ -196,12 +305,28 @@ class SparseEngine:
         self.redeposit(out)
         return mine
 
-    def redeposit(self, results: dict[int, jnp.ndarray]) -> None:
+    def redeposit(self, results: dict) -> None:
         """Hand back results claimed from :meth:`flush` that belong to
         another submitter; the next :meth:`flush` returns them. Lets an
         intermediary (e.g. the GNN service) drive the shared queue
         without swallowing foreign requests' results."""
         self._redeposited.update(results)
+
+    # ----------------------------------------------------- fault/guard ---
+    def _breaker(self, graph: str, op: str) -> CircuitBreaker:
+        br = self._breakers.get((graph, op))
+        if br is None:
+            br = self._breakers[(graph, op)] = CircuitBreaker(
+                self.policy.breaker_threshold, self.policy.probe_after)
+        return br
+
+    def _validate(self, out, site: tuple) -> None:
+        if not bool(jnp.all(jnp.isfinite(out))):
+            raise NonFiniteOutput(site)
+
+    def _fail(self, results: dict, err: ServeError) -> None:
+        self._health["errors_returned"] += 1
+        results[err.rid] = err
 
     def _account_exec(self, fn, p: int, c: int) -> None:
         st = self._stats
@@ -209,17 +334,44 @@ class SparseEngine:
         st["panel_slots"] += p
         st["real_panels"] += c
 
-    def _call(self, fn, cache, *args, **kw):
+    def _call(self, fn, cache, *args, _site=None, **kw):
+        """One executable invocation: fault-plan tick, cache-hit
+        accounting, optional NaN poisoning and non-finite screening."""
+        nan = (self.faults.check(*_site)
+               if self.faults is not None and _site is not None else None)
         before = len(cache)
         out = fn(*args, **kw)
         if len(cache) > before:
             self._stats["exec_cache_misses"] += 1
         else:
             self._stats["exec_cache_hits"] += 1
+        if nan == "nan":
+            from repro.serve.faults import poison_output
+
+            out = poison_output(out)
+        if self.policy is not None and self.policy.validate \
+                and _site is not None:
+            self._validate(out, _site)
         return out
 
+    def _guarded(self, graph: str, op: str, strategy: str, thunk):
+        """A degraded-rung invocation under the same fault/validation
+        discipline as :meth:`_call` (no AOT-cache accounting — the
+        degraded rungs trade dispatch cost for isolation)."""
+        nan = (self.faults.check(graph, op, strategy)
+               if self.faults is not None else None)
+        out = thunk()
+        if nan == "nan":
+            from repro.serve.faults import poison_output
+
+            out = poison_output(out)
+        if self.policy is not None and self.policy.validate:
+            self._validate(out, (graph, op, strategy))
+        return out
+
+    # ------------------------------------------------------- fast path ---
     def _pack_spmm(self, entry, apply_one, cache, chunk, w, results,
-                   limit) -> None:
+                   limit, site) -> None:
         """Column-pack ``chunk`` into ``(k, p·w)`` applies, at most
         ``limit`` panels per apply (sub-chunks and the trailing batch
         pad stay on the panel-bucket grid for executable reuse)."""
@@ -235,35 +387,93 @@ class SparseEngine:
                                        parts[0].dtype))
             wide = parts[0] if len(parts) == 1 else jnp.concatenate(
                 parts, axis=1)
-            out = self._call(apply_one, cache, wide)
+            out = self._call(apply_one, cache, wide, _site=site)
             for j, r in enumerate(sub):
                 results[r.rid] = out[:, j * w:j * w + r.width]
             self._account_exec(apply_one, p, cs)
             st["computed_cells"] += p * entry.k * w
 
     def _execute(self, key, chunk, results) -> None:
-        graph, op, w, _dtype, has_ev = key
+        """Serve one bucket chunk: deadline drops, then the fast packed
+        path behind its circuit breaker, then — on failure — the
+        per-request degradation ladder. Requests a partially-executed
+        fast path already answered keep their results."""
+        graph, op, w, _dtype, _has_ev = key
         entry = self.registry.get(graph)       # LRU touch per execution
+        chunk = self._drop_expired(graph, op, chunk, results)
+        if not chunk:
+            return
+        cells = entry.k if op == "spmm" else entry.m + entry.k
+        for r in chunk:
+            self._stats["real_cells"] += cells * r.width
+        br = self._breaker(graph, op) if self.policy is not None else None
+        detail, kind = "", "runtime"
+        if br is None or br.allow_fast():
+            try:
+                self._execute_fast(key, entry, chunk, results)
+                if br is not None:
+                    br.on_fast_success()
+                return
+            except Exception as exc:
+                kind = classify_apply_error(exc)
+                self._health["failures"][kind] += 1
+                detail = f"fast path: {exc}"
+                if br is not None:
+                    br.on_fast_failure()
+        else:
+            self._health["breaker_skips"] += 1
+            kind, detail = "breaker_open", f"breaker open for {graph}/{op}"
+        remaining = [r for r in chunk if r.rid not in results]
+        if self.policy is None:
+            for r in remaining:
+                self._fail(results, ExecutionFailed(
+                    kind, rid=r.rid, graph=graph, op=op, detail=detail))
+            return
+        for r in remaining:
+            out = self._serve_degraded(entry, graph, op, w, r)
+            if isinstance(out, ServeError):
+                self._fail(results, out)
+            else:
+                results[r.rid] = out
+                self._stats["computed_cells"] += cells * w
+                self._account_exec(None, 1, 1)
+
+    def _drop_expired(self, graph, op, chunk, results) -> list:
+        if all(r.deadline_at is None for r in chunk):
+            return chunk
+        now = self._clock()
+        live = []
+        for r in chunk:
+            if r.deadline_at is not None and now > r.deadline_at:
+                self._health["deadline_misses"] += 1
+                self._fail(results, DeadlineExceeded(
+                    rid=r.rid, graph=graph, op=op,
+                    detail=f"late by {(now - r.deadline_at) * 1e3:.1f}ms"))
+            else:
+                live.append(r)
+        return live
+
+    def _execute_fast(self, key, entry, chunk, results) -> None:
+        graph, op, w, _dtype, has_ev = key
         fn = entry.op(op)
         reg = self.registry
         c = len(chunk)
         st = self._stats
+        site = (graph, op, "fast")
         if op == "spmm":
-            for r in chunk:
-                st["real_cells"] += entry.k * r.width
             if entry.sharded and has_ev:
                 # Values change the plan per request: no packing.
                 for r in chunk:
                     out = self._call(fn, fn._cache,
                                      _pad_width(r.payload[0], w),
-                                     edge_vals=r.edge_vals)
+                                     edge_vals=r.edge_vals, _site=site)
                     results[r.rid] = out[:, :r.width]
                     self._account_exec(fn, 1, 1)
                     st["computed_cells"] += entry.k * w
                 return
             if entry.sharded:
                 self._pack_spmm(entry, fn, fn._cache, chunk, w, results,
-                                reg.pack_limit(entry, w))
+                                reg.pack_limit(entry, w), site)
                 return
             if has_ev:
                 # Revalued panels ride a vmapped stack (plan values
@@ -279,7 +489,8 @@ class SparseEngine:
                     ev = jnp.concatenate(
                         [ev, jnp.zeros((p - c, entry.nnz), ev.dtype)])
                 out = self._call(fn, fn._cache, stack, backend=reg.backend,
-                                 interpret=reg.interpret, edge_vals=ev)
+                                 interpret=reg.interpret, edge_vals=ev,
+                                 _site=site)
                 for i, r in enumerate(chunk):
                     results[r.rid] = out[i, :, :r.width]
                 self._account_exec(fn, p, c)
@@ -294,17 +505,15 @@ class SparseEngine:
                               interpret=reg.interpret)
 
             self._pack_spmm(entry, apply_one, single._apply_cache, chunk,
-                            w, results, reg.pack_limit(entry, w))
+                            w, results, reg.pack_limit(entry, w), site)
             return
         # ---- sddmm ----
-        for r in chunk:
-            st["real_cells"] += (entry.m + entry.k) * r.width
         if entry.sharded:
             # kf is the reduction axis — no packing across requests.
             for r in chunk:
                 out = self._call(fn, fn._cache,
                                  _pad_width(r.payload[0], w),
-                                 _pad_width(r.payload[1], w))
+                                 _pad_width(r.payload[1], w), _site=site)
                 results[r.rid] = out
                 self._account_exec(fn, 1, 1)
                 st["computed_cells"] += (entry.m + entry.k) * w
@@ -318,11 +527,137 @@ class SparseEngine:
             ys = jnp.concatenate(
                 [ys, jnp.zeros((p - c,) + ys.shape[1:], ys.dtype)])
         out = self._call(fn, fn._cache, xs, ys, backend=reg.backend,
-                         interpret=reg.interpret)
+                         interpret=reg.interpret, _site=site)
         for i, r in enumerate(chunk):
             results[r.rid] = out[i]
         self._account_exec(fn, p, c)
         st["computed_cells"] += p * (entry.m + entry.k) * w
+
+    # ------------------------------------------------ degradation ladder ---
+    def _rungs(self, entry, op: str, w: int, r: SparseRequest) -> list:
+        """The per-request rungs below ``fast`` for one request, in
+        degradation order: ``single`` (isolate the poison request on
+        the same AOT operator), ``unsegmented`` (strip the §4.3 launch
+        tables — batched entries only), ``xla`` (pure-jnp reference —
+        for sharded entries, the sharded apply on the xla backend).
+        Every rung is bit-equivalent to the fast path."""
+        from repro.kernels import ref
+
+        reg = self.registry
+        fn = entry.op(op)
+        width = r.width
+        if op == "spmm":
+            bp = _pad_width(r.payload[0], w)
+            if entry.sharded:
+                from repro.dist.sparse import spmm_sharded
+
+                def single():
+                    return fn(bp, edge_vals=r.edge_vals)[:, :width]
+
+                def xla():
+                    return spmm_sharded(
+                        fn.part, bp, mesh=fn.mesh, axis=fn.axis,
+                        backend="xla", edge_vals=r.edge_vals,
+                        b_layout=fn.b_layout,
+                        interpret=fn.interpret)[:, :width]
+
+                return [("single", single), ("xla", xla)]
+            one = fn.op                     # the underlying LibraSpMM
+
+            def arrays(segmented: bool):
+                arrs = (one.arrays if segmented
+                        else _strip_segments(one.arrays))
+                return (arrs if r.edge_vals is None
+                        else ref.revalue_spmm_arrays(arrs, r.edge_vals))
+
+            def single():
+                if r.edge_vals is None:
+                    return one(bp, backend=reg.backend,
+                               interpret=reg.interpret)[:, :width]
+                out = fn(bp[None], backend=reg.backend,
+                         interpret=reg.interpret,
+                         edge_vals=r.edge_vals[None])
+                return out[0, :, :width]
+
+            def unsegmented():
+                cfg = one.tune_config.replace(ts=0, cs=0)
+                return spmm_apply(arrays(False), bp, m=one.m,
+                                  nwin=one.nwin, backend=reg.backend,
+                                  cfg=cfg,
+                                  interpret=reg.interpret)[:, :width]
+
+            def xla():
+                return spmm_apply(arrays(True), bp, m=one.m, nwin=one.nwin,
+                                  backend="xla",
+                                  cfg=one.tune_config)[:, :width]
+
+            rungs = [("single", single)]
+            if any("_seg_" in k for k in one.arrays):
+                rungs.append(("unsegmented", unsegmented))
+            return rungs + [("xla", xla)]
+        # ---- sddmm ----
+        xp = _pad_width(r.payload[0], w)
+        yp = _pad_width(r.payload[1], w)
+        if entry.sharded:
+            from repro.dist.sparse import sddmm_sharded
+
+            return [
+                ("single", lambda: fn(xp, yp)),
+                ("xla", lambda: sddmm_sharded(
+                    fn.part, xp, yp, mesh=fn.mesh, axis=fn.axis,
+                    backend="xla", y_layout=fn.y_layout,
+                    interpret=fn.interpret)),
+            ]
+        one = fn.op                         # the underlying LibraSDDMM
+
+        def sd_single():
+            return one(xp, yp, backend=reg.backend,
+                       interpret=reg.interpret)
+
+        def sd_unsegmented():
+            cfg = one.tune_config.replace(ts=0, cs=0)
+            return sddmm_apply(_strip_segments(one.arrays), xp, yp,
+                               nnz=one.nnz, backend=reg.backend, cfg=cfg,
+                               interpret=reg.interpret)
+
+        def sd_xla():
+            return sddmm_apply(one.arrays, xp, yp, nnz=one.nnz,
+                               backend="xla", cfg=one.tune_config)
+
+        rungs = [("single", sd_single)]
+        if any("_seg_" in k for k in one.arrays):
+            rungs.append(("unsegmented", sd_unsegmented))
+        return rungs + [("xla", sd_xla)]
+
+    def _serve_degraded(self, entry, graph: str, op: str, w: int,
+                        r: SparseRequest):
+        """Walk the ladder for one request: ``attempts_per_rung`` tries
+        per rung with capped exponential backoff between attempts, then
+        fall one rung. Returns the result array, or an
+        :class:`~repro.serve.resilience.ExecutionFailed` carrying the
+        last failure's classification when the whole ladder is
+        exhausted."""
+        policy = self.policy
+        kind, detail = "runtime", ""
+        attempt_no = 0
+        for rung, thunk in self._rungs(entry, op, w, r):
+            for _ in range(policy.attempts_per_rung):
+                if attempt_no > 0:
+                    self._sleep(backoff_delay(policy, attempt_no - 1))
+                    self._health["retries"] += 1
+                    self._health["retry_hist"][attempt_no] += 1
+                attempt_no += 1
+                try:
+                    out = self._guarded(graph, op, rung, thunk)
+                except Exception as exc:
+                    kind = classify_apply_error(exc)
+                    detail = f"{rung}: {exc}"
+                    self._health["failures"][kind] += 1
+                    continue
+                self._health["degraded_served"][rung] += 1
+                return out
+        return ExecutionFailed(kind, rid=r.rid, graph=graph, op=op,
+                               detail=detail)
 
     # ------------------------------------------------------------ stats ---
     def stats(self) -> dict:
@@ -337,4 +672,33 @@ class SparseEngine:
             / max(st["computed_cells"], 1),
             "requests_per_s": served / t if t > 0 else float("nan"),
             "registry": self.registry.stats(),
+        }
+
+    def health(self) -> dict:
+        """Resilience telemetry: breaker states and transition counts,
+        per-reason reject counters, deadline-miss rate, retry and
+        degradation histograms, and fault-injection accounting."""
+        h = self._health
+        submitted = h["deadline_submitted"]
+        return {
+            "resilience_enabled": self.policy is not None,
+            "breakers": {f"{g}/{o}": br.snapshot()
+                         for (g, o), br in sorted(self._breakers.items())},
+            "rejected": dict(self._rejected),
+            "deadline": {
+                "submitted": submitted,
+                "misses": h["deadline_misses"],
+                "miss_rate": h["deadline_misses"] / max(submitted, 1),
+                "infeasible_rejected":
+                    self._rejected.get("infeasible_deadline", 0),
+            },
+            "retries": h["retries"],
+            "retry_hist": dict(h["retry_hist"]),
+            "degraded_served": dict(h["degraded_served"]),
+            "failures": dict(h["failures"]),
+            "breaker_skips": h["breaker_skips"],
+            "errors_returned": h["errors_returned"],
+            "autoflushes": dict(h["autoflushes"]),
+            "faults_injected": (len(self.faults.log)
+                                if self.faults is not None else 0),
         }

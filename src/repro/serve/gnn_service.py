@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.serve.engine import SparseEngine
 from repro.serve.registry import as_csr
+from repro.serve.resilience import ServeError
 from repro.sparse.matrix import SparseCSR
 
 
@@ -48,6 +49,7 @@ class _Scoring:
     model: str
     h: jnp.ndarray
     node_ids: np.ndarray | None
+    error: ServeError | None = None   # first failed layer op, if any
 
 
 class GNNService:
@@ -110,19 +112,25 @@ class GNNService:
         self.engine.redeposit(out)
         return mine
 
-    def flush(self) -> dict[int, jnp.ndarray]:
+    def flush(self) -> dict[int, jnp.ndarray | ServeError]:
         """Run all pending scoring requests layer-by-layer; each layer
         is one engine flush (two for AGNN: SDDMM, then valued SpMM), so
         requests share panel executions — foreign requests queued on
         the shared engine are served too, their results redeposited for
-        their submitters."""
+        their submitters.
+
+        A scoring whose layer op comes back as a typed
+        :class:`~repro.serve.resilience.ServeError` fails alone: it
+        stops riding later layers, its slot in the returned dict holds
+        the error, and every other scoring completes normally.
+        """
         pending, self._pending = self._pending, []
         if not pending:
             return {}
         depth = max(len(self._models[s.model].params) for s in pending)
         for layer in range(depth):
-            live = [s for s in pending
-                    if layer < len(self._models[s.model].params)]
+            live = [s for s in pending if s.error is None
+                    and layer < len(self._models[s.model].params)]
             gcn = [s for s in live
                    if self._models[s.model].kind == "gcn"]
             agnn = [s for s in live
@@ -141,11 +149,16 @@ class GNNService:
                 out = self._flush_engine(tickets)
                 for s in agnn:
                     mdl = self._models[s.model]
+                    val = out[tickets[s.rid]]
+                    if isinstance(val, ServeError):
+                        s.error = val
+                        continue
                     lp = mdl.params[layer]
-                    scores = out[tickets[s.rid]] * lp["beta"]
+                    scores = val * lp["beta"]
                     # duck-typed on (edge_row, m) — the same softmax the
                     # training path uses
                     att[s.rid] = edge_softmax(mdl, scores)
+                agnn = [s for s in agnn if s.error is None]
             tickets = {}
             for s in gcn:
                 mdl = self._models[s.model]
@@ -156,18 +169,28 @@ class GNNService:
                 tickets[s.rid] = self.engine.submit(
                     mdl.graph, "spmm", b=s.h, edge_vals=att[s.rid])
             out = self._flush_engine(tickets)
-            for s in live:
+            for s in gcn + agnn:
                 mdl = self._models[s.model]
                 h = out[tickets[s.rid]]
+                if isinstance(h, ServeError):
+                    s.error = h
+                    continue
                 if mdl.kind == "agnn":
                     h = h @ mdl.params[layer]["w"]
                 if layer < len(mdl.params) - 1:
                     h = jax.nn.relu(h)
                 s.h = h
-        return {s.rid: (s.h if s.node_ids is None else s.h[s.node_ids])
+        return {s.rid: (s.error if s.error is not None
+                        else s.h if s.node_ids is None
+                        else s.h[s.node_ids])
                 for s in pending}
 
     def score(self, model: str, feats, node_ids=None) -> jnp.ndarray:
-        """Single-request convenience: submit + flush."""
+        """Single-request convenience: submit + flush. Raises the typed
+        :class:`~repro.serve.resilience.ServeError` if this scoring
+        failed (multi-request callers get errors as values instead)."""
         rid = self.submit(model, feats, node_ids)
-        return self.flush()[rid]
+        out = self.flush()[rid]
+        if isinstance(out, ServeError):
+            raise out
+        return out

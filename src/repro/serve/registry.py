@@ -98,7 +98,7 @@ class GraphRegistry:
                  width_buckets=DEFAULT_WIDTH_BUCKETS,
                  panel_buckets=DEFAULT_PANEL_BUCKETS,
                  backend: str = "xla", interpret: bool = True,
-                 tune="model", tune_cache=None):
+                 tune="model", tune_cache=None, faults=None):
         assert max_graphs >= 1
         self.max_graphs = max_graphs
         self.width_buckets = tuple(sorted(width_buckets))
@@ -107,6 +107,10 @@ class GraphRegistry:
         self.interpret = interpret
         self.tune = tune
         self.tune_cache = tune_cache
+        # Optional repro.serve.faults.FaultPlan: AOT warmup compiles
+        # tick it at the "warm" strategy, so compile-time faults are as
+        # schedulable as execution-time ones.
+        self.faults = faults
         self._entries: OrderedDict[str, RegisteredGraph] = OrderedDict()
         self._names: dict[str, str] = {}
         self._reuse_hits = 0
@@ -254,6 +258,8 @@ class GraphRegistry:
         compiled = 0
         for w in (widths if widths is not None else self.width_buckets):
             for p in (panels if panels is not None else self.panel_buckets):
+                if self.faults is not None:
+                    self.faults.check(name, op, "warm")
                 if op == "spmm":
                     if p > self.pack_limit(entry, w):
                         continue   # the engine will never run this shape

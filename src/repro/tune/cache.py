@@ -12,8 +12,14 @@ as one JSON file per key under a configurable directory:
   plus the tuning context (operator kind, dense width, dtype, backend,
   mode, any explicit threshold override, tuner version);
 * writes are atomic (``os.replace`` of a temp file) so concurrent
-  processes never observe a torn entry; unreadable/corrupt entries are
-  treated as misses;
+  processes never observe a torn entry; every entry carries a BLAKE2b
+  checksum over its config, verified on ``get()`` — an unparseable or
+  checksum-mismatched file is **quarantined** (moved to a
+  ``quarantine/`` subdir for post-mortem, counted in :meth:`PlanCache.stats`)
+  rather than silently treated as a cold miss, so disk corruption and
+  tampering are observable. Version-skewed entries (an old
+  :data:`CACHE_VERSION`) stay silent misses — stale format, not
+  corruption;
 * the store is **LRU-capped** (``max_entries``, default
   :data:`DEFAULT_MAX_ENTRIES`, overridable via
   ``$REPRO_TUNE_CACHE_MAX``): every hit refreshes the entry's mtime and
@@ -38,7 +44,7 @@ import tempfile
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import TuneConfig
 
-CACHE_VERSION = 3  # v3: TuneConfig gained ts/cs (§4.3 segment caps)
+CACHE_VERSION = 4  # v4: entries carry a BLAKE2b config checksum
 _ENV_VAR = "REPRO_TUNE_CACHE_DIR"
 _ENV_MAX = "REPRO_TUNE_CACHE_MAX"
 DEFAULT_MAX_ENTRIES = 512
@@ -80,8 +86,16 @@ def tune_key(a: SparseCSR, *, op: str, width: int, dtype: str,
     return h.hexdigest()
 
 
+def config_checksum(config: dict) -> str:
+    """BLAKE2b content checksum over an entry's config dict (canonical
+    JSON, sorted keys) — what :meth:`PlanCache.get` verifies."""
+    payload = json.dumps(config, sort_keys=True).encode()
+    return hashlib.blake2b(payload, digest_size=16).hexdigest()
+
+
 class PlanCache:
-    """File-per-key JSON store for tuned configs, LRU-capped."""
+    """File-per-key JSON store for tuned configs, LRU-capped,
+    checksum-verified with quarantine of corrupt entries."""
 
     def __init__(self, root: str | None = None,
                  max_entries: int | None = None):
@@ -89,20 +103,46 @@ class PlanCache:
         self.max_entries = (default_max_entries() if max_entries is None
                             else max_entries)
         assert self.max_entries >= 1
+        self.quarantined = 0
+        self.quarantined_by_reason: dict[str, int] = {}
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, f"{key}.json")
+
+    @property
+    def quarantine_dir(self) -> str:
+        return os.path.join(self.root, "quarantine")
+
+    def _quarantine(self, path: str, reason: str) -> None:
+        """Move a corrupt entry aside for post-mortem instead of leaving
+        it to masquerade as a cold miss on every future lookup."""
+        qdir = self.quarantine_dir
+        try:
+            os.makedirs(qdir, exist_ok=True)
+            os.replace(path, os.path.join(qdir, os.path.basename(path)))
+        except OSError:
+            return  # concurrently evicted/quarantined: nothing to move
+        self.quarantined += 1
+        self.quarantined_by_reason[reason] = \
+            self.quarantined_by_reason.get(reason, 0) + 1
 
     def get(self, key: str) -> TuneConfig | None:
         path = self._path(key)
         try:
             with open(path) as f:
                 doc = json.load(f)
+        except FileNotFoundError:
+            return None                      # cold miss, not corruption
         except (OSError, ValueError):
+            self._quarantine(path, "unparseable")
             return None
         if doc.get("version") != CACHE_VERSION:
-            return None
+            return None          # stale format: version bumps are benign
         cfg = doc.get("config")
+        if not isinstance(cfg, dict) \
+                or doc.get("checksum") != config_checksum(cfg):
+            self._quarantine(path, "checksum_mismatch")
+            return None
         try:
             out = TuneConfig(**cfg).replace(source="cache")
         except TypeError:
@@ -115,9 +155,11 @@ class PlanCache:
 
     def put(self, key: str, cfg: TuneConfig, meta: dict | None = None) -> str:
         os.makedirs(self.root, exist_ok=True)
+        config = dataclasses.asdict(cfg)
         doc = {
             "version": CACHE_VERSION,
-            "config": dataclasses.asdict(cfg),
+            "config": config,
+            "checksum": config_checksum(config),
             "meta": meta or {},
         }
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
@@ -136,11 +178,23 @@ class PlanCache:
         return self._path(key)
 
     def size(self) -> int:
-        """Number of resident entries."""
+        """Number of resident entries (quarantined files excluded)."""
         try:
             return sum(n.endswith(".json") for n in os.listdir(self.root))
         except OSError:
             return 0
+
+    def stats(self) -> dict:
+        try:
+            in_quarantine = len(os.listdir(self.quarantine_dir))
+        except OSError:
+            in_quarantine = 0
+        return {
+            "entries": self.size(),
+            "quarantined": self.quarantined,
+            "quarantined_by_reason": dict(self.quarantined_by_reason),
+            "quarantine_dir_files": in_quarantine,
+        }
 
     def _evict(self) -> None:
         """Drop least-recently-used entries beyond ``max_entries``.
