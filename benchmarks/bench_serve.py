@@ -99,6 +99,19 @@ def run() -> list[tuple]:
     rows.append(("serve/fastpath_overhead", t_res * 1e6,
                  f"x{t_plain / t_res:.2f}_vs_plain"))
 
+    # --- observability tax: the identical mix through a traced engine
+    #     (spans + metrics on) vs untraced. The ISSUE gates this ≤5%;
+    #     the regression gate holds the committed bar (~1.0).
+    from repro.obs.trace import Tracer, use_tracer
+
+    t_untraced = mix_through(SparseEngine(registry, max_queue=512))
+    tracer = Tracer()
+    with use_tracer(tracer):
+        t_traced = mix_through(SparseEngine(registry, max_queue=512,
+                                            tracer=tracer))
+    rows.append(("serve/obs_overhead", t_traced * 1e6,
+                 f"x{t_untraced / t_traced:.2f}_vs_untraced"))
+
     # --- bit-identity of the served mix (the serving contract)
     served = engined()
     ok = all(

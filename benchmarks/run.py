@@ -22,6 +22,9 @@ def main() -> None:
     ap.add_argument("--json-dir", default=None, metavar="DIR",
                     help="also write one BENCH_<suite>.json per suite "
                          "(same row schema as --json)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="trace every suite and write one Perfetto/"
+                         "Chrome-trace TRACE_<suite>.json per suite")
     args = ap.parse_args()
     from benchmarks import (
         bench_ablations,
@@ -58,6 +61,8 @@ def main() -> None:
             pass
     if args.json_dir:
         os.makedirs(args.json_dir, exist_ok=True)
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failed = False
     records: list[dict] = []
@@ -66,6 +71,13 @@ def main() -> None:
         if name not in only:
             continue
         suite_records = by_suite.setdefault(name, [])
+        tracer = None
+        if args.trace_dir:
+            from repro.obs.trace import Tracer, set_tracer
+
+            tracer = Tracer()
+            prev = set_tracer(tracer)
+            root = tracer.span(f"suite.{name}").open()
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
@@ -80,6 +92,15 @@ def main() -> None:
             records.append(rec)
             suite_records.append(rec)
             traceback.print_exc()
+        finally:
+            if tracer is not None:
+                root.close()
+                set_tracer(prev)
+                path = os.path.join(args.trace_dir,
+                                    f"TRACE_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(tracer.to_chrome_trace(), f)
+                    f.write("\n")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)

@@ -17,13 +17,24 @@ unsegmented → xla), the expired request is dropped with a typed
 ``DeadlineExceeded`` result, and ``engine.health()`` shows the
 breaker/degradation accounting.
 
+The whole demo runs under a :class:`~repro.obs.trace.Tracer`: at the
+end it prints the engine's Prometheus exposition and dumps the full
+request lifecycle (``serve.admit`` → ``serve.flush`` → ``bucket`` →
+``execute`` → ``apply`` → ``serve.complete``) as a Chrome-trace JSON
+you can open in Perfetto.
+
     PYTHONPATH=src python examples/serve_sparse.py
 """
+import json
+import os
+import tempfile
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.models import gnn as mgnn
+from repro.obs import Tracer
 from repro.serve import (
     FaultPlan,
     FaultRule,
@@ -46,7 +57,11 @@ def main() -> None:
     registry.register(fem, name="tenantB/fem")
     registry.register(graph, name="tenantC/social-alias")  # shared plan
 
-    engine = SparseEngine(registry)
+    # trace the whole serving session: every request's lifecycle shows
+    # up as serve.admit/flush/bucket/execute/apply spans + a
+    # serve.complete marker per answered rid
+    tracer = Tracer()
+    engine = SparseEngine(registry, tracer=tracer)
 
     # --- a mixed burst: three tenants, ragged widths, both operators
     rids = {}
@@ -127,6 +142,23 @@ def main() -> None:
     for key, val in st["registry"].items():
         if key != "names":
             print(f"{key:>20}: {val}")
+
+    # --- observability: Prometheus exposition + request-lifecycle trace
+    expo = engine.metrics.exposition()
+    print("\n--- metrics exposition (serve_* series) ---")
+    for line in expo.splitlines():
+        if line.startswith("serve_") and not line.endswith(" 0"):
+            print(line)
+    trace = tracer.to_chrome_trace()
+    path = os.path.join(tempfile.gettempdir(), "serve_sparse_trace.json")
+    with open(path, "w") as f:
+        json.dump(trace, f)
+        f.write("\n")
+    admits = sum(e["name"] == "serve.admit" for e in trace["traceEvents"])
+    completes = sum(
+        e["name"] == "serve.complete" for e in trace["traceEvents"])
+    print(f"\nwrote {len(trace['traceEvents'])}-event Perfetto trace "
+          f"({admits} admits, {completes} completes) to {path}")
     print("serve_sparse OK")
 
 

@@ -33,6 +33,7 @@ from repro.core.formats import (
     WINDOW,
 )
 from repro.core.windows import extract_windows, num_windows
+from repro.obs.trace import get_tracer
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import TuneConfig
 
@@ -158,11 +159,19 @@ def preprocess_spmm(
     win = (rows // WINDOW).astype(np.int64)
     sub = (rows % WINDOW).astype(np.int64)
 
+    # Sequential phase spans (manual open/close keeps the stage bodies
+    # un-indented; disabled tracer → shared no-op span).
+    tr = get_tracer()
+    root = tr.span("preprocess.spmm", m=a.m, k=a.k, nnz=a.nnz).open()
+    ph = tr.span("preprocess.spmm.identify").open()
+
     # ---- Stage 1 (paper Alg. 1 step 1): vector identification.
     order = np.lexsort((sub, cols, win))
     winS, subS, colS, valS, posS = (win[order], sub[order], cols[order],
                                     vals[order], pos[order])
     if winS.size == 0:
+        ph.close()
+        root.close()
         return _empty_spmm_plan(a, threshold, bk, ts_tile, balance)
     newvec = np.ones(winS.size, bool)
     newvec[1:] = (winS[1:] != winS[:-1]) | (colS[1:] != colS[:-1])
@@ -171,6 +180,9 @@ def preprocess_spmm(
     vec_count = np.bincount(vec_id, minlength=nvec)
     vec_win = winS[newvec]
     vec_col = colS[newvec]
+
+    ph.close()
+    ph = tr.span("preprocess.spmm.split", threshold=threshold).open()
 
     # ---- Stage 2: 2D-aware threshold split at vector granularity.
     vec_tc = vec_count >= threshold
@@ -182,6 +194,9 @@ def preprocess_spmm(
     win_has_tc[vec_win[vec_tc]] = True
     win_has_vpu[vec_win[~vec_tc]] = True
     shared = win_has_tc & win_has_vpu
+
+    ph.close()
+    ph = tr.span("preprocess.spmm.condense", bk=bk).open()
 
     # ---- Stage 3a: condense TC vectors into 8×bk blocks (bulk scatter).
     # rank of each TC vector within its window (vectors are window-sorted)
@@ -227,6 +242,9 @@ def preprocess_spmm(
         tc_win_arr = np.zeros(0, np.int32)
         blk_atomic = np.zeros(0, bool)
         tc_blocks_per_win = np.zeros(nwin, np.int64)
+
+    ph.close()
+    ph = tr.span("preprocess.spmm.residue", ts_tile=ts_tile).open()
 
     # ---- Stage 3b: residue → row tiles (short/long split, Cs bounded).
     res_sel = ~el_tc
@@ -290,6 +308,9 @@ def preprocess_spmm(
                        np.zeros(1, bool), 0, ts_tile,
                        pos=np.full((1, ts_tile), -1, np.int32))
 
+    ph.close()
+    ph = tr.span("preprocess.spmm.segments").open()
+
     row_shared = win_has_tc[np.arange(a.m, dtype=np.int64) // WINDOW] \
         if a.m else np.zeros(0, bool)
     tc_seg, vpu_seg, spt = _spmm_segments(
@@ -307,6 +328,8 @@ def preprocess_spmm(
         "balance": balance,
     }
     assert tc_nnz + vpu_nnz == a.nnz, (tc_nnz, vpu_nnz, a.nnz)
+    ph.close()
+    root.set(tc_ratio=meta["tc_ratio"]).close()
     return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)
 
 
@@ -492,6 +515,9 @@ def preprocess_sddmm(
     bk = _resolve(bk, cfg and cfg.bk, DEFAULT_BK_SDDMM)
     ts_tile = _resolve(ts_tile, cfg and cfg.ts_tile, 32)
     balance = _resolve_balance(balance, cfg)
+    tr = get_tracer()
+    root = tr.span("preprocess.sddmm", m=a.m, k=a.k, nnz=a.nnz).open()
+    ph = tr.span("preprocess.sddmm.windows").open()
     wvs = extract_windows(a)
     nwin = num_windows(a.m)
 
@@ -507,6 +533,10 @@ def preprocess_sddmm(
     el_rows, el_cols, el_pos = [], [], []
     win_has_tc = np.zeros(nwin, bool)
     win_has_vpu = np.zeros(nwin, bool)
+
+    ph.close()
+    ph = tr.span("preprocess.sddmm.distribute", threshold=threshold,
+                 bk=bk).open()
 
     for w, wv in enumerate(wvs):
         split = split_sddmm_window(wv, threshold, bk)
@@ -537,6 +567,9 @@ def preprocess_sddmm(
                 el_rows.append(r)
                 el_cols.append(col)
                 el_pos.append(pos_lookup[(r, col)])
+
+    ph.close()
+    ph = tr.span("preprocess.sddmm.pack", ts_tile=ts_tile).open()
 
     shared = win_has_tc & win_has_vpu
     blk_atomic = np.asarray([bool(shared[w]) for w in blk_win], bool) \
@@ -591,6 +624,8 @@ def preprocess_sddmm(
         "balance": balance,
     }
     assert tc_nnz + n_el == a.nnz
+    ph.close()
+    root.set(tc_ratio=meta["tc_ratio"]).close()
     return SDDMMPlan(a.m, a.k, a.nnz, threshold, tc, tc_out_pos, vpu, meta)
 
 

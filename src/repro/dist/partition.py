@@ -58,8 +58,33 @@ from repro.core.formats import (
 from repro.core.sddmm import threshold_for_mode as sddmm_threshold_for_mode
 from repro.core.spmm import threshold_for_mode as spmm_threshold_for_mode
 from repro.core.windows import num_windows
+from repro.obs.metrics import default_registry
 from repro.sparse.matrix import SparseCSR
 from repro.tune import TuneConfig, tune_sddmm, tune_spmm
+
+
+def _publish_partition_gauges(op: str, meta: dict, n_shards: int) -> None:
+    """Shard-balance gauges on the process metrics registry — the §4.3
+    balance residue and halo overhead of the most recent partition of
+    each operator, labeled by op."""
+    m = default_registry()
+    m.gauge("dist_shards", "Shard count of the last partition",
+            labels=("op",)).set(n_shards, op=op)
+    m.gauge("dist_nnz_max_over_mean",
+            "nnz balance residue of the last partition",
+            labels=("op",)).set(meta["balance"]["max_over_mean"], op=op)
+    sb = meta.get("segment_balance")
+    if sb:
+        m.gauge("dist_segment_max_over_mean",
+                "Segment-load balance residue of the last partition",
+                labels=("op",)).set(sb["max_over_mean"], op=op)
+    halo = sum(meta.get("halo_rows", []))
+    nnz = max(sum(meta.get("shard_nnz", [])), 1)
+    m.gauge("dist_halo_rows", "Total halo rows of the last partition",
+            labels=("op",)).set(halo, op=op)
+    m.gauge("dist_halo_waste_frac",
+            "Halo rows / total nnz of the last partition",
+            labels=("op",)).set(halo / nnz, op=op)
 
 
 # ------------------------------------------------------- window split ---
@@ -521,6 +546,7 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
         "mode": mode,
         **_segment_load_meta(plans),
     }
+    _publish_partition_gauges("spmm", meta, n_shards)
     return SpMMPartition(a.m, a.k, a.nnz, n_shards, shards, stacked,
                          wmax, rows_pad,
                          _combine_run_cfg([s.cfg for s in shards], bk_c,
@@ -687,6 +713,7 @@ def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
         "mode": mode,
         **_segment_load_meta(plans),
     }
+    _publish_partition_gauges("sddmm", meta, n_shards)
     return SDDMMPartition(a.m, a.k, a.nnz, n_shards, shards, stacked,
                           wmax, rows_pad, nnz_pad,
                           _combine_run_cfg([s.cfg for s in shards],

@@ -110,13 +110,27 @@ def cached_compile(cache: dict, key, lower):
     surface as :class:`ApplyError` (stage ``"compile"``) with nothing
     installed in the cache.
     """
+    from repro.obs.trace import get_tracer
+
+    tr = get_tracer()
     fn = cache.get(key)
     if fn is None:
         try:
-            fn = cache[key] = lower().compile()
+            with tr.span("kernels.compile", key=str(key)):
+                fn = cache[key] = lower().compile()
         except Exception as exc:
             raise ApplyError("compile", key, exc) from exc
-    return fn
+    if not tr.enabled:
+        return fn
+
+    # Enabled-tracer path only: the executable stays raw in the cache
+    # (warm()/hit accounting and explain read it directly); callers get
+    # a thin wrapper that times each invocation.
+    def traced(*args, **kw):
+        with tr.span("kernels.execute", key=str(key)):
+            return fn(*args, **kw)
+
+    return traced
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:

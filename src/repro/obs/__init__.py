@@ -1,0 +1,57 @@
+"""repro.obs — zero-dependency observability: spans, metrics, explain.
+
+Three pieces (see the module docstrings for depth):
+
+* :mod:`repro.obs.trace` — nestable spans with an injectable clock,
+  Chrome-trace/Perfetto + dict-tree exporters, and a disabled process
+  default so instrumented hot paths cost one attribute check.
+* :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
+  labeled series, Prometheus text exposition and JSON snapshot;
+  ``SparseEngine``/``GraphRegistry``/``PlanCache`` report into it.
+* :mod:`repro.obs.explain` — plan/execution explainer for the paper's
+  structural quantities (TC fraction, segment balance, padding waste,
+  predicted vs measured occupancy).
+
+Exports resolve lazily (PEP 562) so ``import repro.obs`` stays cheap
+and free of jax imports until an explain function is actually called.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "Tracer": "repro.obs.trace",
+    "Span": "repro.obs.trace",
+    "NULL_SPAN": "repro.obs.trace",
+    "get_tracer": "repro.obs.trace",
+    "set_tracer": "repro.obs.trace",
+    "use_tracer": "repro.obs.trace",
+    "Counter": "repro.obs.metrics",
+    "Gauge": "repro.obs.metrics",
+    "Histogram": "repro.obs.metrics",
+    "MetricsRegistry": "repro.obs.metrics",
+    "DEFAULT_BUCKETS": "repro.obs.metrics",
+    "default_registry": "repro.obs.metrics",
+    "explain_plan": "repro.obs.explain",
+    "explain_spmm": "repro.obs.explain",
+    "explain_sddmm": "repro.obs.explain",
+    "explain_entry": "repro.obs.explain",
+    "explain_partition": "repro.obs.explain",
+    "render_table": "repro.obs.explain",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.obs' has no attribute "
+                             f"{name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -67,11 +67,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import Counter, defaultdict
+from collections import defaultdict
 
 import jax.numpy as jnp
 
 from repro.kernels.ops import classify_apply_error, sddmm_apply, spmm_apply
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.serve.registry import GraphRegistry
 from repro.serve.resilience import (
     CircuitBreaker,
@@ -124,12 +126,16 @@ def _strip_segments(arrs: dict) -> dict:
 class SparseEngine:
     """Admit → bucket → pack → execute → unpad/scatter, resiliently."""
 
+    #: Breaker state → numeric gauge value (Prometheus-friendly).
+    _BREAKER_LEVEL = {"closed": 0, "half_open": 1, "open": 2}
+
     def __init__(self, registry: GraphRegistry, *, max_queue: int = 256,
                  max_panel: int | None = None,
                  resilience: ResiliencePolicy | bool = True,
                  faults=None, flush_at_depth: int | None = None,
                  flush_slack_ms: float | None = None,
-                 clock=time.monotonic, sleep=time.sleep):
+                 clock=time.monotonic, sleep=time.sleep,
+                 metrics: MetricsRegistry | None = None, tracer=None):
         self.registry = registry
         self.max_queue = max_queue
         self.max_panel = (max(registry.panel_buckets)
@@ -150,25 +156,79 @@ class SparseEngine:
         self._next_rid = 0
         self._next_deadline: float | None = None
         self._breakers: dict[tuple, CircuitBreaker] = {}
+        # Every lifecycle counter lives on the metrics registry;
+        # stats()/health() stay thin dict views over the instruments.
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._tracer = tracer
+        m = self.metrics
         self._stats = {
-            "submitted": 0, "served": 0, "flushes": 0,
-            "panels_executed": 0, "panel_slots": 0, "real_panels": 0,
-            "real_cells": 0, "computed_cells": 0,
-            "exec_cache_hits": 0, "exec_cache_misses": 0,
-            "serve_time_s": 0.0,
-        }
-        self._rejected: dict[str, int] = defaultdict(int)
+            k: m.counter(f"serve_{k}_total", help)
+            for k, help in (
+                ("submitted", "Requests admitted"),
+                ("served", "Requests answered by flush"),
+                ("flushes", "Explicit flush calls"),
+                ("panels_executed", "Executable invocations"),
+                ("panel_slots", "Panel slots dispatched (incl. padding)"),
+                ("real_panels", "Panel slots carrying a real request"),
+                ("real_cells", "Output cells requested"),
+                ("computed_cells", "Output cells computed (incl. padding)"),
+                ("exec_cache_hits", "AOT executable cache hits"),
+                ("exec_cache_misses", "AOT executable cache misses"),
+                ("serve_time_s", "Wall seconds spent inside flush"),
+            )}
+        self._rejected = m.counter(
+            "serve_rejected_total", "Requests rejected at admission",
+            labels=("reason",))
+        self._applies = m.counter(
+            "serve_applies_total", "Executable invocations by strategy",
+            labels=("strategy",))
         self._health = {
-            "deadline_submitted": 0, "deadline_misses": 0,
-            "retries": 0, "retry_hist": Counter(),
-            "degraded_served": Counter(), "failures": Counter(),
-            "breaker_skips": 0, "errors_returned": 0,
-            "autoflushes": Counter(),
+            "deadline_submitted": m.counter(
+                "serve_deadline_submitted_total",
+                "Requests admitted with a deadline"),
+            "deadline_misses": m.counter(
+                "serve_deadline_misses_total",
+                "Requests dropped past their deadline"),
+            "retries": m.counter(
+                "serve_retries_total", "Degraded-ladder retry attempts"),
+            "retry_hist": m.counter(
+                "serve_retry_attempts_total",
+                "Retries by global attempt number",
+                labels=("attempts",)),
+            "degraded_served": m.counter(
+                "serve_degraded_served_total",
+                "Requests answered below the fast path, by rung",
+                labels=("rung",)),
+            "failures": m.counter(
+                "serve_failures_total",
+                "Apply failures by classification", labels=("kind",)),
+            "breaker_skips": m.counter(
+                "serve_breaker_skips_total",
+                "Fast-path skips while a breaker was open"),
+            "errors_returned": m.counter(
+                "serve_errors_returned_total",
+                "Typed ServeError results returned"),
+            "autoflushes": m.counter(
+                "serve_autoflushes_total",
+                "Host-side auto-flush triggers", labels=("kind",)),
         }
+        self._deadline_slack = m.histogram(
+            "serve_deadline_slack_seconds",
+            "Deadline slack (deadline − now) at execution time")
+        self._breaker_gauge = m.gauge(
+            "serve_breaker_state",
+            "Circuit-breaker state (0 closed, 1 half-open, 2 open)",
+            labels=("graph", "op"))
+
+    @property
+    def tracer(self):
+        """The explicit ``tracer=`` when given, else the process
+        tracer (:func:`repro.obs.trace.get_tracer`)."""
+        return self._tracer if self._tracer is not None else get_tracer()
 
     # -------------------------------------------------------- admission ---
     def _reject(self, reason: str, detail: str = "") -> None:
-        self._rejected[reason] += 1
+        self._rejected.inc(reason=reason)
         raise AdmissionError(reason, detail)
 
     def submit(self, graph: str, op: str, *, b=None, x=None, y=None,
@@ -182,6 +242,20 @@ class SparseEngine:
         bucket executes yields a typed
         :class:`~repro.serve.resilience.DeadlineExceeded` result.
         """
+        tr = self.tracer
+        if not tr.enabled:
+            return self._submit(graph, op, b=b, x=x, y=y,
+                                edge_vals=edge_vals,
+                                deadline_ms=deadline_ms)
+        with tr.span("serve.admit", graph=graph, op=op) as sp:
+            rid = self._submit(graph, op, b=b, x=x, y=y,
+                               edge_vals=edge_vals,
+                               deadline_ms=deadline_ms)
+            sp.set(rid=rid)
+            return rid
+
+    def _submit(self, graph: str, op: str, *, b=None, x=None, y=None,
+                edge_vals=None, deadline_ms: float | None = None) -> int:
         if len(self._queue) >= self.max_queue:
             self._reject("queue_full", f"max_queue={self.max_queue}")
         try:
@@ -229,7 +303,7 @@ class SparseEngine:
                              f"deadline_ms={deadline_ms} (floor "
                              f"{max(floor, 0.0)}ms)")
             deadline_at = self._clock() + deadline_ms / 1e3
-            self._health["deadline_submitted"] += 1
+            self._health["deadline_submitted"].inc()
             if (self._next_deadline is None
                     or deadline_at < self._next_deadline):
                 self._next_deadline = deadline_at
@@ -238,7 +312,7 @@ class SparseEngine:
         self._queue.append(SparseRequest(rid, graph, op, width, wb, payload,
                                          edge_vals, deadline_ms,
                                          deadline_at))
-        self._stats["submitted"] += 1
+        self._stats["submitted"].inc()
         self._maybe_autoflush()
         return rid
 
@@ -261,7 +335,7 @@ class SparseEngine:
                 <= self.flush_slack_ms / 1e3):
             kind = "deadline"
         if kind is not None:
-            self._health["autoflushes"][kind] += 1
+            self._health["autoflushes"].inc(kind=kind)
             self.redeposit(self.flush())
 
     # -------------------------------------------------------- execution ---
@@ -280,19 +354,32 @@ class SparseEngine:
         results, self._redeposited = self._redeposited, {}
         if not pending:
             return results
+        tr = self.tracer
         t0 = time.perf_counter()
-        buckets: dict[tuple, list[SparseRequest]] = defaultdict(list)
-        for r in pending:
-            key = (r.graph, r.op, r.bucket_width,
-                   str(r.payload[0].dtype), r.edge_vals is not None)
-            buckets[key].append(r)
-        for key in sorted(buckets, key=str):
-            reqs = buckets[key]
-            for i in range(0, len(reqs), self.max_panel):
-                self._execute(key, reqs[i:i + self.max_panel], results)
-        self._stats["flushes"] += 1
-        self._stats["served"] += len(pending)
-        self._stats["serve_time_s"] += time.perf_counter() - t0
+        with tr.span("serve.flush", requests=len(pending)):
+            with tr.span("serve.bucket"):
+                buckets: dict[tuple, list[SparseRequest]] = \
+                    defaultdict(list)
+                for r in pending:
+                    key = (r.graph, r.op, r.bucket_width,
+                           str(r.payload[0].dtype),
+                           r.edge_vals is not None)
+                    buckets[key].append(r)
+            for key in sorted(buckets, key=str):
+                reqs = buckets[key]
+                for i in range(0, len(reqs), self.max_panel):
+                    chunk = reqs[i:i + self.max_panel]
+                    self._execute(key, chunk, results)
+                    if tr.enabled:
+                        for r in chunk:
+                            if r.rid in results:
+                                tr.event(
+                                    "serve.complete", rid=r.rid,
+                                    ok=not isinstance(results[r.rid],
+                                                      ServeError))
+        self._stats["flushes"].inc()
+        self._stats["served"].inc(len(pending))
+        self._stats["serve_time_s"].inc(time.perf_counter() - t0)
         return results
 
     def serve(self, submissions) -> dict[int, jnp.ndarray | ServeError]:
@@ -320,31 +407,39 @@ class SparseEngine:
                 self.policy.breaker_threshold, self.policy.probe_after)
         return br
 
+    def _publish_breaker(self, graph: str, op: str,
+                         br: CircuitBreaker) -> None:
+        self._breaker_gauge.set(self._BREAKER_LEVEL[br.state],
+                                graph=graph, op=op)
+
     def _validate(self, out, site: tuple) -> None:
         if not bool(jnp.all(jnp.isfinite(out))):
             raise NonFiniteOutput(site)
 
     def _fail(self, results: dict, err: ServeError) -> None:
-        self._health["errors_returned"] += 1
+        self._health["errors_returned"].inc()
         results[err.rid] = err
 
     def _account_exec(self, fn, p: int, c: int) -> None:
         st = self._stats
-        st["panels_executed"] += 1
-        st["panel_slots"] += p
-        st["real_panels"] += c
+        st["panels_executed"].inc()
+        st["panel_slots"].inc(p)
+        st["real_panels"].inc(c)
 
     def _call(self, fn, cache, *args, _site=None, **kw):
         """One executable invocation: fault-plan tick, cache-hit
         accounting, optional NaN poisoning and non-finite screening."""
         nan = (self.faults.check(*_site)
                if self.faults is not None and _site is not None else None)
+        strategy = _site[2] if _site is not None else "fast"
+        self._applies.inc(strategy=strategy)
         before = len(cache)
-        out = fn(*args, **kw)
+        with self.tracer.span("serve.apply", strategy=strategy):
+            out = fn(*args, **kw)
         if len(cache) > before:
-            self._stats["exec_cache_misses"] += 1
+            self._stats["exec_cache_misses"].inc()
         else:
-            self._stats["exec_cache_hits"] += 1
+            self._stats["exec_cache_hits"].inc()
         if nan == "nan":
             from repro.serve.faults import poison_output
 
@@ -360,7 +455,9 @@ class SparseEngine:
         degraded rungs trade dispatch cost for isolation)."""
         nan = (self.faults.check(graph, op, strategy)
                if self.faults is not None else None)
-        out = thunk()
+        self._applies.inc(strategy=strategy)
+        with self.tracer.span("serve.apply", strategy=strategy):
+            out = thunk()
         if nan == "nan":
             from repro.serve.faults import poison_output
 
@@ -377,21 +474,23 @@ class SparseEngine:
         pad stay on the panel-bucket grid for executable reuse)."""
         reg = self.registry
         st = self._stats
+        tr = self.tracer
         for i in range(0, len(chunk), limit):
             sub = chunk[i:i + limit]
             cs = len(sub)
             p = min(reg.panel_bucket(cs), limit)
-            parts = [_pad_width(r.payload[0], w) for r in sub]
-            if p > cs:
-                parts.append(jnp.zeros((entry.k, (p - cs) * w),
-                                       parts[0].dtype))
-            wide = parts[0] if len(parts) == 1 else jnp.concatenate(
-                parts, axis=1)
+            with tr.span("serve.pack", panels=p, requests=cs):
+                parts = [_pad_width(r.payload[0], w) for r in sub]
+                if p > cs:
+                    parts.append(jnp.zeros((entry.k, (p - cs) * w),
+                                           parts[0].dtype))
+                wide = parts[0] if len(parts) == 1 else jnp.concatenate(
+                    parts, axis=1)
             out = self._call(apply_one, cache, wide, _site=site)
             for j, r in enumerate(sub):
                 results[r.rid] = out[:, j * w:j * w + r.width]
             self._account_exec(apply_one, p, cs)
-            st["computed_cells"] += p * entry.k * w
+            st["computed_cells"].inc(p * entry.k * w)
 
     def _execute(self, key, chunk, results) -> None:
         """Serve one bucket chunk: deadline drops, then the fast packed
@@ -399,13 +498,19 @@ class SparseEngine:
         per-request degradation ladder. Requests a partially-executed
         fast path already answered keep their results."""
         graph, op, w, _dtype, _has_ev = key
+        with self.tracer.span("serve.execute", graph=graph, op=op,
+                              width=w, requests=len(chunk)):
+            self._execute_chunk(key, chunk, results)
+
+    def _execute_chunk(self, key, chunk, results) -> None:
+        graph, op, w, _dtype, _has_ev = key
         entry = self.registry.get(graph)       # LRU touch per execution
         chunk = self._drop_expired(graph, op, chunk, results)
         if not chunk:
             return
         cells = entry.k if op == "spmm" else entry.m + entry.k
         for r in chunk:
-            self._stats["real_cells"] += cells * r.width
+            self._stats["real_cells"].inc(cells * r.width)
         br = self._breaker(graph, op) if self.policy is not None else None
         detail, kind = "", "runtime"
         if br is None or br.allow_fast():
@@ -413,15 +518,18 @@ class SparseEngine:
                 self._execute_fast(key, entry, chunk, results)
                 if br is not None:
                     br.on_fast_success()
+                    self._publish_breaker(graph, op, br)
                 return
             except Exception as exc:
                 kind = classify_apply_error(exc)
-                self._health["failures"][kind] += 1
+                self._health["failures"].inc(kind=kind)
                 detail = f"fast path: {exc}"
                 if br is not None:
                     br.on_fast_failure()
+                    self._publish_breaker(graph, op, br)
         else:
-            self._health["breaker_skips"] += 1
+            self._health["breaker_skips"].inc()
+            self._publish_breaker(graph, op, br)
             kind, detail = "breaker_open", f"breaker open for {graph}/{op}"
         remaining = [r for r in chunk if r.rid not in results]
         if self.policy is None:
@@ -435,7 +543,7 @@ class SparseEngine:
                 self._fail(results, out)
             else:
                 results[r.rid] = out
-                self._stats["computed_cells"] += cells * w
+                self._stats["computed_cells"].inc(cells * w)
                 self._account_exec(None, 1, 1)
 
     def _drop_expired(self, graph, op, chunk, results) -> list:
@@ -444,11 +552,16 @@ class SparseEngine:
         now = self._clock()
         live = []
         for r in chunk:
-            if r.deadline_at is not None and now > r.deadline_at:
-                self._health["deadline_misses"] += 1
+            if r.deadline_at is None:
+                live.append(r)
+                continue
+            slack = r.deadline_at - now
+            self._deadline_slack.observe(max(slack, 0.0))
+            if slack < 0:
+                self._health["deadline_misses"].inc()
                 self._fail(results, DeadlineExceeded(
                     rid=r.rid, graph=graph, op=op,
-                    detail=f"late by {(now - r.deadline_at) * 1e3:.1f}ms"))
+                    detail=f"late by {-slack * 1e3:.1f}ms"))
             else:
                 live.append(r)
         return live
@@ -469,7 +582,7 @@ class SparseEngine:
                                      edge_vals=r.edge_vals, _site=site)
                     results[r.rid] = out[:, :r.width]
                     self._account_exec(fn, 1, 1)
-                    st["computed_cells"] += entry.k * w
+                    st["computed_cells"].inc(entry.k * w)
                 return
             if entry.sharded:
                 self._pack_spmm(entry, fn, fn._cache, chunk, w, results,
@@ -494,7 +607,7 @@ class SparseEngine:
                 for i, r in enumerate(chunk):
                     results[r.rid] = out[i, :, :r.width]
                 self._account_exec(fn, p, c)
-                st["computed_cells"] += p * entry.k * w
+                st["computed_cells"].inc(p * entry.k * w)
                 return
             # Plain panels: cost-aware column packing through the
             # single fused apply (one executable per packed width).
@@ -516,7 +629,7 @@ class SparseEngine:
                                  _pad_width(r.payload[1], w), _site=site)
                 results[r.rid] = out
                 self._account_exec(fn, 1, 1)
-                st["computed_cells"] += (entry.m + entry.k) * w
+                st["computed_cells"].inc((entry.m + entry.k) * w)
             return
         p = reg.panel_bucket(c)
         xs = jnp.stack([_pad_width(r.payload[0], w) for r in chunk])
@@ -531,7 +644,7 @@ class SparseEngine:
         for i, r in enumerate(chunk):
             results[r.rid] = out[i]
         self._account_exec(fn, p, c)
-        st["computed_cells"] += p * (entry.m + entry.k) * w
+        st["computed_cells"].inc(p * (entry.m + entry.k) * w)
 
     # ------------------------------------------------ degradation ladder ---
     def _rungs(self, entry, op: str, w: int, r: SparseRequest) -> list:
@@ -644,28 +757,30 @@ class SparseEngine:
             for _ in range(policy.attempts_per_rung):
                 if attempt_no > 0:
                     self._sleep(backoff_delay(policy, attempt_no - 1))
-                    self._health["retries"] += 1
-                    self._health["retry_hist"][attempt_no] += 1
+                    self._health["retries"].inc()
+                    self._health["retry_hist"].inc(attempts=attempt_no)
                 attempt_no += 1
                 try:
                     out = self._guarded(graph, op, rung, thunk)
                 except Exception as exc:
                     kind = classify_apply_error(exc)
                     detail = f"{rung}: {exc}"
-                    self._health["failures"][kind] += 1
+                    self._health["failures"].inc(kind=kind)
                     continue
-                self._health["degraded_served"][rung] += 1
+                self._health["degraded_served"].inc(rung=rung)
                 return out
         return ExecutionFailed(kind, rid=r.rid, graph=graph, op=op,
                                detail=detail)
 
     # ------------------------------------------------------------ stats ---
     def stats(self) -> dict:
-        st = dict(self._stats)
+        """Thin dict view over the metrics registry (same schema as when
+        these were plain ints; the instruments are the ground truth)."""
+        st = {k: c.value for k, c in self._stats.items()}
         served, t = st["served"], st["serve_time_s"]
         return {
             **st,
-            "rejected": dict(self._rejected),
+            "rejected": self._rejected.series(),
             "queue_depth": len(self._queue),
             "bucket_occupancy": st["real_panels"] / max(st["panel_slots"], 1),
             "padding_waste": 1.0 - st["real_cells"]
@@ -677,28 +792,31 @@ class SparseEngine:
     def health(self) -> dict:
         """Resilience telemetry: breaker states and transition counts,
         per-reason reject counters, deadline-miss rate, retry and
-        degradation histograms, and fault-injection accounting."""
+        degradation histograms, and fault-injection accounting. Like
+        :meth:`stats`, a thin view over the metrics registry."""
         h = self._health
-        submitted = h["deadline_submitted"]
+        submitted = h["deadline_submitted"].value
+        misses = h["deadline_misses"].value
+        rejected = self._rejected.series()
         return {
             "resilience_enabled": self.policy is not None,
             "breakers": {f"{g}/{o}": br.snapshot()
                          for (g, o), br in sorted(self._breakers.items())},
-            "rejected": dict(self._rejected),
+            "rejected": rejected,
             "deadline": {
                 "submitted": submitted,
-                "misses": h["deadline_misses"],
-                "miss_rate": h["deadline_misses"] / max(submitted, 1),
+                "misses": misses,
+                "miss_rate": misses / max(submitted, 1),
                 "infeasible_rejected":
-                    self._rejected.get("infeasible_deadline", 0),
+                    rejected.get("infeasible_deadline", 0),
             },
-            "retries": h["retries"],
-            "retry_hist": dict(h["retry_hist"]),
-            "degraded_served": dict(h["degraded_served"]),
-            "failures": dict(h["failures"]),
-            "breaker_skips": h["breaker_skips"],
-            "errors_returned": h["errors_returned"],
-            "autoflushes": dict(h["autoflushes"]),
+            "retries": h["retries"].value,
+            "retry_hist": h["retry_hist"].series(),
+            "degraded_served": h["degraded_served"].series(),
+            "failures": h["failures"].series(),
+            "breaker_skips": h["breaker_skips"].value,
+            "errors_returned": h["errors_returned"].value,
+            "autoflushes": h["autoflushes"].series(),
             "faults_injected": (len(self.faults.log)
                                 if self.faults is not None else 0),
         }

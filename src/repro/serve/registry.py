@@ -36,6 +36,7 @@ from collections import OrderedDict
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 from repro.sparse.matrix import SparseCSR
 from repro.tune.cache import matrix_signature
 
@@ -98,7 +99,8 @@ class GraphRegistry:
                  width_buckets=DEFAULT_WIDTH_BUCKETS,
                  panel_buckets=DEFAULT_PANEL_BUCKETS,
                  backend: str = "xla", interpret: bool = True,
-                 tune="model", tune_cache=None, faults=None):
+                 tune="model", tune_cache=None, faults=None,
+                 metrics: MetricsRegistry | None = None):
         assert max_graphs >= 1
         self.max_graphs = max_graphs
         self.width_buckets = tuple(sorted(width_buckets))
@@ -113,9 +115,18 @@ class GraphRegistry:
         self.faults = faults
         self._entries: OrderedDict[str, RegisteredGraph] = OrderedDict()
         self._names: dict[str, str] = {}
-        self._reuse_hits = 0
-        self._evictions = 0
-        self._registered_total = 0
+        # Counters live on the metrics registry; stats() is a thin view.
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        m = self.metrics
+        self._reuse_hits = m.counter(
+            "registry_reuse_hits_total",
+            "register() calls resolved to a resident graph")
+        self._evictions = m.counter(
+            "registry_evictions_total", "Graphs evicted by the LRU cap")
+        self._registered_total = m.counter(
+            "registry_registered_total", "Distinct graphs ever built")
+        self._resident = m.gauge(
+            "registry_graphs_resident", "Graphs currently resident")
 
     # ------------------------------------------------------------ admit ---
     def register(self, a: SparseCSR, *, name: str | None = None,
@@ -146,7 +157,7 @@ class GraphRegistry:
                     other.names.discard(name)
             entry.names.add(name)
             self._names[name] = key
-            self._reuse_hits += 1
+            self._reuse_hits.inc()
             missing = [kind for kind in ops if kind not in entry.ops]
             if missing:   # alias asked for more operators: top up in place
                 built, hits = self._build(a, missing, mode=mode, mesh=mesh,
@@ -186,7 +197,8 @@ class GraphRegistry:
             if other is not None:
                 other.names.discard(name)
         self._names[name] = key
-        self._registered_total += 1
+        self._registered_total.inc()
+        self._resident.set(len(self._entries))
         while len(self._entries) > self.max_graphs:
             old_key, old = self._entries.popitem(last=False)
             for alias in old.names:
@@ -194,7 +206,8 @@ class GraphRegistry:
                 # entry — a rebound name belongs to a resident graph.
                 if self._names.get(alias) == old_key:
                     self._names.pop(alias)
-            self._evictions += 1
+            self._evictions.inc()
+            self._resident.set(len(self._entries))
         for w in warm_widths:
             for kind in built:
                 self.warm(name, kind, widths=(w,))
@@ -320,9 +333,9 @@ class GraphRegistry:
     def stats(self) -> dict:
         return {
             "graphs_resident": len(self._entries),
-            "registered_total": self._registered_total,
-            "reuse_hits": self._reuse_hits,
-            "evictions": self._evictions,
+            "registered_total": self._registered_total.value,
+            "reuse_hits": self._reuse_hits.value,
+            "evictions": self._evictions.value,
             "plan_cache_hits": sum(e.plan_cache_hits
                                    for e in self._entries.values()),
             "warmed_executables": sum(e.warmed

@@ -41,6 +41,7 @@ import json
 import os
 import tempfile
 
+from repro.obs.metrics import MetricsRegistry
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import TuneConfig
 
@@ -98,13 +99,25 @@ class PlanCache:
     checksum-verified with quarantine of corrupt entries."""
 
     def __init__(self, root: str | None = None,
-                 max_entries: int | None = None):
+                 max_entries: int | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.root = root or default_cache_dir()
         self.max_entries = (default_max_entries() if max_entries is None
                             else max_entries)
         assert self.max_entries >= 1
-        self.quarantined = 0
-        self.quarantined_by_reason: dict[str, int] = {}
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        m = self.metrics
+        self._hits = m.counter(
+            "tune_cache_hits_total", "PlanCache lookups served from disk")
+        self._misses = m.counter(
+            "tune_cache_misses_total",
+            "PlanCache lookups that fell through (cold/stale/corrupt)")
+        self._quarantined = m.counter(
+            "tune_cache_quarantined_total",
+            "Corrupt entries moved to quarantine", labels=("reason",))
+        self._quarantined_bytes = m.counter(
+            "tune_cache_quarantined_bytes_total",
+            "Bytes of corrupt entries moved to quarantine")
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, f"{key}.json")
@@ -113,18 +126,30 @@ class PlanCache:
     def quarantine_dir(self) -> str:
         return os.path.join(self.root, "quarantine")
 
+    # Back-compat views over the metric counters (old attribute names).
+    @property
+    def quarantined(self) -> int:
+        return sum(self._quarantined.series().values())
+
+    @property
+    def quarantined_by_reason(self) -> dict:
+        return self._quarantined.series()
+
     def _quarantine(self, path: str, reason: str) -> None:
         """Move a corrupt entry aside for post-mortem instead of leaving
         it to masquerade as a cold miss on every future lookup."""
         qdir = self.quarantine_dir
         try:
+            nbytes = os.path.getsize(path)
+        except OSError:
+            nbytes = 0
+        try:
             os.makedirs(qdir, exist_ok=True)
             os.replace(path, os.path.join(qdir, os.path.basename(path)))
         except OSError:
             return  # concurrently evicted/quarantined: nothing to move
-        self.quarantined += 1
-        self.quarantined_by_reason[reason] = \
-            self.quarantined_by_reason.get(reason, 0) + 1
+        self._quarantined.inc(reason=reason)
+        self._quarantined_bytes.inc(nbytes)
 
     def get(self, key: str) -> TuneConfig | None:
         path = self._path(key)
@@ -132,25 +157,31 @@ class PlanCache:
             with open(path) as f:
                 doc = json.load(f)
         except FileNotFoundError:
+            self._misses.inc()
             return None                      # cold miss, not corruption
         except (OSError, ValueError):
             self._quarantine(path, "unparseable")
+            self._misses.inc()
             return None
         if doc.get("version") != CACHE_VERSION:
+            self._misses.inc()
             return None          # stale format: version bumps are benign
         cfg = doc.get("config")
         if not isinstance(cfg, dict) \
                 or doc.get("checksum") != config_checksum(cfg):
             self._quarantine(path, "checksum_mismatch")
+            self._misses.inc()
             return None
         try:
             out = TuneConfig(**cfg).replace(source="cache")
         except TypeError:
+            self._misses.inc()
             return None  # field drift ⇒ treat as miss
         try:
             os.utime(path)  # LRU touch: a hit is a use
         except OSError:
             pass  # concurrently evicted — the parsed doc is still good
+        self._hits.inc()
         return out
 
     def put(self, key: str, cfg: TuneConfig, meta: dict | None = None) -> str:
@@ -185,14 +216,20 @@ class PlanCache:
             return 0
 
     def stats(self) -> dict:
+        """Stable schema (thin view over the metric counters): entry
+        count, hit/miss totals, quarantine reason → count plus total
+        bytes moved, and the on-disk quarantine file count."""
         try:
             in_quarantine = len(os.listdir(self.quarantine_dir))
         except OSError:
             in_quarantine = 0
         return {
             "entries": self.size(),
+            "hits": self._hits.value,
+            "misses": self._misses.value,
             "quarantined": self.quarantined,
             "quarantined_by_reason": dict(self.quarantined_by_reason),
+            "quarantined_bytes": self._quarantined_bytes.value,
             "quarantine_dir_files": in_quarantine,
         }
 

@@ -371,7 +371,10 @@ def model_tune_spmm(a: SparseCSR, *, n: int = 128, dtype=np.float32,
     config always describes the plan that will actually be built.
     """
     from repro.core import preprocess as P
+    from repro.obs.trace import get_tracer
 
+    _sp = get_tracer().span("tune.model", op="spmm", m=a.m, k=a.k,
+                            nnz=a.nnz).open()
     bk = P.DEFAULT_BK_SPMM if bk is None else bk
     feat = feat or matrix_features(a)
     ts_tile = _pick_ts_tile(feat) if ts_tile is None else ts_tile
@@ -428,6 +431,8 @@ def model_tune_spmm(a: SparseCSR, *, n: int = 128, dtype=np.float32,
             f"model_tune_spmm: smallest tile candidates need {step} B "
             f"per grid step, over the {budget} B VMEM budget",
             RuntimeWarning, stacklevel=2)
+    _sp.set(threshold=threshold, kt=kt, nt=nt,
+            vmem_step_bytes=step).close()
     return cfg
 
 
@@ -445,7 +450,10 @@ def model_tune_sddmm(a: SparseCSR, *, kf: int = 128, dtype=np.float32,
     this only happens for pathological ``bk``/``ts_tile`` overrides).
     """
     from repro.core import preprocess as P
+    from repro.obs.trace import get_tracer
 
+    _sp = get_tracer().span("tune.model", op="sddmm", m=a.m, k=a.k,
+                            nnz=a.nnz).open()
     bk = P.DEFAULT_BK_SDDMM if bk is None else bk
     feat = feat or matrix_features(a)
     ts_tile = 32 if ts_tile is None else ts_tile
@@ -492,4 +500,6 @@ def model_tune_sddmm(a: SparseCSR, *, kf: int = 128, dtype=np.float32,
             f"model_tune_sddmm: smallest tile candidates need {step} B "
             f"per grid step, over the {budget} B VMEM budget",
             RuntimeWarning, stacklevel=2)
+    _sp.set(threshold=threshold, yt=yt, kf_tile=kf_tile,
+            vmem_step_bytes=step).close()
     return cfg

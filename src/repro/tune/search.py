@@ -22,6 +22,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.obs.trace import get_tracer
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import (
     DEFAULT_TUNE,
@@ -158,11 +159,17 @@ def search_spmm(a: SparseCSR, *, n: int = 128, backend: str = "xla",
     rng = np.random.default_rng(seed)
     b = jax.numpy.asarray(rng.standard_normal((a.k, n)).astype(np.float32))
     best_i, timings = 0, {}
-    for i, cand in enumerate(candidates):
-        op = LibraSpMM(a, mode=mode, threshold=cand.threshold, tune=cand)
-        timings[i] = timer(lambda: op(b, backend=backend))
-        if timings[i] < timings[best_i]:
-            best_i = i
+    with get_tracer().span("tune.search", op="spmm", backend=backend,
+                           candidates=len(candidates)) as sp:
+        for i, cand in enumerate(candidates):
+            op = LibraSpMM(a, mode=mode, threshold=cand.threshold,
+                           tune=cand)
+            timings[i] = timer(lambda: op(b, backend=backend))
+            sp.event("candidate", index=i, threshold=cand.threshold,
+                     seconds=timings[i])
+            if timings[i] < timings[best_i]:
+                best_i = i
+        sp.set(best=best_i, best_seconds=timings[best_i])
     return candidates[best_i].replace(source="search"), timings
 
 
@@ -182,9 +189,15 @@ def search_sddmm(a: SparseCSR, *, kf: int = 128, backend: str = "xla",
     x = jax.numpy.asarray(rng.standard_normal((a.m, kf)).astype(np.float32))
     y = jax.numpy.asarray(rng.standard_normal((a.k, kf)).astype(np.float32))
     best_i, timings = 0, {}
-    for i, cand in enumerate(candidates):
-        op = LibraSDDMM(a, mode=mode, threshold=cand.threshold, tune=cand)
-        timings[i] = timer(lambda: op(x, y, backend=backend))
-        if timings[i] < timings[best_i]:
-            best_i = i
+    with get_tracer().span("tune.search", op="sddmm", backend=backend,
+                           candidates=len(candidates)) as sp:
+        for i, cand in enumerate(candidates):
+            op = LibraSDDMM(a, mode=mode, threshold=cand.threshold,
+                            tune=cand)
+            timings[i] = timer(lambda: op(x, y, backend=backend))
+            sp.event("candidate", index=i, threshold=cand.threshold,
+                     seconds=timings[i])
+            if timings[i] < timings[best_i]:
+                best_i = i
+        sp.set(best=best_i, best_seconds=timings[best_i])
     return candidates[best_i].replace(source="search"), timings

@@ -1,0 +1,419 @@
+"""Observability layer: tracer no-op guarantee, span round-trip,
+metrics exposition, PlanCache quarantine schema, explain reports, and
+the tracing-never-perturbs-results bit-identity contract."""
+import json
+import re
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import (
+    NULL_SPAN,
+    Tracer,
+    get_tracer,
+    set_tracer,
+    use_tracer,
+)
+
+
+def fake_clock(start=100.0, step=0.5):
+    t = [start - step]
+
+    def clock():
+        t[0] += step
+        return t[0]
+
+    return clock
+
+
+# ------------------------------------------------------------- tracer ---
+class TestTracer:
+    def test_disabled_tracer_is_noop(self):
+        tr = Tracer(enabled=False)
+        sp = tr.span("a", x=1)
+        assert sp is NULL_SPAN          # one shared object, no alloc
+        assert tr.span("b") is NULL_SPAN
+        with sp as s:
+            s.set(y=2).event("e")
+        tr.event("orphan")
+        assert tr.roots == []
+        assert tr.to_dict() == []
+        assert tr.to_chrome_trace()["traceEvents"] == []
+
+    def test_default_process_tracer_disabled(self):
+        assert get_tracer().enabled is False
+
+    def test_nesting_and_attrs_round_trip_chrome(self):
+        tr = Tracer(clock=fake_clock(step=1.0))
+        with tr.span("outer", op="spmm", n=32) as outer:
+            outer.event("mark", phase="mid")
+            with tr.span("inner", strategy="fast"):
+                pass
+        doc = json.loads(json.dumps(tr.to_chrome_trace()))
+        evs = doc["traceEvents"]
+        by_name = {e["name"]: e for e in evs}
+        out, inn, mark = (by_name["outer"], by_name["inner"],
+                          by_name["mark"])
+        assert out["ph"] == "X" and inn["ph"] == "X"
+        assert mark["ph"] == "i" and mark["s"] == "t"
+        assert out["args"] == {"op": "spmm", "n": 32}
+        assert inn["args"] == {"strategy": "fast"}
+        assert mark["args"] == {"phase": "mid"}
+        # containment: inner lives within [outer.ts, outer.ts+dur]
+        assert out["ts"] <= inn["ts"]
+        assert inn["ts"] + inn["dur"] <= out["ts"] + out["dur"]
+        assert out["ts"] <= mark["ts"] <= out["ts"] + out["dur"]
+
+    def test_dict_tree_structure(self):
+        tr = Tracer(clock=fake_clock(step=1.0))
+        with tr.span("root"):
+            with tr.span("child", k=1):
+                pass
+            with tr.span("child", k=2):
+                pass
+        (tree,) = tr.to_dict()
+        assert tree["name"] == "root"
+        assert [c["attrs"]["k"] for c in tree["children"]] == [1, 2]
+        assert tree["start_s"] == 0.0
+        assert tree["dur_s"] == pytest.approx(5.0)
+
+    def test_set_after_open_and_late_attrs(self):
+        tr = Tracer(clock=fake_clock())
+        with tr.span("s", a=1) as sp:
+            sp.set(rid=7)
+        assert tr.roots[0].attrs == {"a": 1, "rid": 7}
+
+    def test_use_tracer_scopes_and_restores(self):
+        prev = get_tracer()
+        t = Tracer()
+        with use_tracer(t):
+            assert get_tracer() is t
+            with get_tracer().span("x"):
+                pass
+        assert get_tracer() is prev
+        assert [s.name for s in t.roots] == ["x"]
+
+    def test_out_of_order_close_tolerated(self):
+        tr = Tracer(clock=fake_clock())
+        a = tr.span("a").open()
+        tr.span("b").open()          # never closed explicitly
+        a.close()                    # pops b too
+        assert tr.current is None
+
+    def test_event_outside_span_dropped(self):
+        tr = Tracer(clock=fake_clock())
+        tr.event("orphan")
+        assert tr.roots == []
+
+
+# ------------------------------------------------------------ metrics ---
+# One Prometheus exposition line: name{labels} value  (labels optional).
+_EXPO_LINE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*"
+    r"(\{[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\""
+    r"(,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\")*\})?"
+    r" (\+Inf|-?[0-9.e+-]+)$")
+
+
+class TestMetrics:
+    def test_counter_gauge_histogram_exposition_parses(self):
+        m = MetricsRegistry()
+        m.counter("requests_total", "Total requests").inc(3)
+        m.counter("errors_total", "Errors", labels=("kind",)).inc(
+            kind="nan")
+        m.gauge("depth", "Queue depth").set(7)
+        h = m.histogram("lat_s", "Latency", buckets=(0.1, 1.0))
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(5.0)
+        text = m.exposition()
+        for line in text.strip().splitlines():
+            if line.startswith("#"):
+                assert re.match(r"^# (HELP|TYPE) ", line), line
+            else:
+                assert _EXPO_LINE.match(line), line
+        assert "requests_total 3" in text
+        assert 'errors_total{kind="nan"} 1' in text
+        # cumulative buckets + sum/count
+        assert 'lat_s_bucket{le="0.1"} 1' in text
+        assert 'lat_s_bucket{le="1"} 2' in text
+        assert 'lat_s_bucket{le="+Inf"} 3' in text
+        assert "lat_s_count 3" in text
+
+    def test_counter_int_view_and_series(self):
+        m = MetricsRegistry()
+        c = m.counter("n_total")
+        c.inc()
+        c.inc(2)
+        assert c.value == 3 and isinstance(c.value, int)
+        lab = m.counter("by_total", labels=("reason",))
+        lab.inc(reason="a")
+        lab.inc(reason="a")
+        lab.inc(reason="b")
+        assert lab.series() == {"a": 2, "b": 1}
+        assert lab.get(reason="a") == 2
+
+    def test_counter_rejects_negative_and_label_mismatch(self):
+        m = MetricsRegistry()
+        c = m.counter("c_total", labels=("k",))
+        with pytest.raises(ValueError):
+            c.inc(-1, k="x")
+        with pytest.raises(ValueError):
+            c.inc(other="x")
+        with pytest.raises(ValueError):
+            m.counter("c_total", labels=("different",))
+        with pytest.raises(ValueError):
+            m.gauge("c_total")       # kind clash
+
+    def test_get_or_create_returns_same_instrument(self):
+        m = MetricsRegistry()
+        assert m.counter("x_total") is m.counter("x_total")
+        assert "x_total" in m
+        assert m["x_total"].kind == "counter"
+
+    def test_snapshot_json_roundtrip(self):
+        m = MetricsRegistry()
+        m.counter("a_total", "help a").inc()
+        m.histogram("h_s", buckets=(1.0,)).observe(0.5)
+        snap = json.loads(json.dumps(m.snapshot()))
+        assert snap["a_total"] == {"type": "counter", "help": "help a",
+                                   "value": 1}
+        hs = snap["h_s"]["series"][0]
+        assert hs["count"] == 1 and hs["sum"] == 0.5
+        assert hs["buckets"]["1"] == 1
+
+
+# -------------------------------------------------- PlanCache metrics ---
+class TestPlanCacheMetrics:
+    def test_quarantine_schema_and_bytes(self, tmp_path):
+        from repro.tune.cache import PlanCache
+
+        pc = PlanCache(root=str(tmp_path))
+        (tmp_path / "bad1.json").write_text("{not json")
+        (tmp_path / "bad2.json").write_text(
+            '{"version": 4, "config": {}, "checksum": "nope"}')
+        assert pc.get("bad1") is None
+        assert pc.get("bad2") is None
+        st = pc.stats()
+        assert st["quarantined"] == 2
+        assert st["quarantined_by_reason"] == {
+            "unparseable": 1, "checksum_mismatch": 1}
+        assert st["quarantined_bytes"] > 0
+        assert st["quarantine_dir_files"] == 2
+        assert st["misses"] == 2 and st["hits"] == 0
+        text = pc.metrics.exposition()
+        assert ('tune_cache_quarantined_total{reason="unparseable"} 1'
+                in text)
+        assert "tune_cache_quarantined_bytes_total" in text
+
+    def test_hit_miss_counters(self, tmp_path):
+        from repro.tune.cache import PlanCache
+        from repro.tune.model import TuneConfig
+
+        pc = PlanCache(root=str(tmp_path))
+        assert pc.get("k") is None          # cold miss
+        pc.put("k", TuneConfig(threshold=3))
+        assert pc.get("k") is not None
+        st = pc.stats()
+        assert st["hits"] == 1 and st["misses"] == 1
+
+
+# ------------------------------------------------------- bit identity ---
+class TestBitIdentity:
+    def test_traced_apply_is_bit_identical(self):
+        import jax.numpy as jnp
+
+        from repro.core.spmm import LibraSpMM
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(128, 96, avg_row=6.0, seed=3)
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(rng.standard_normal((96, 16)).astype(np.float32))
+        base = np.asarray(LibraSpMM(a)(b))
+        with use_tracer(Tracer()) as tr:
+            traced = np.asarray(LibraSpMM(a)(b))
+        assert np.array_equal(base, traced)
+        names = {s.name for s in tr.roots}
+        assert "preprocess.spmm" in names
+        assert any(s.name == "kernels.compile"
+                   for s in tr.roots)
+
+    def test_traced_engine_mix_is_bit_identical(self):
+        from repro.serve import GraphRegistry, SparseEngine
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(64, 48, avg_row=5.0, seed=1)
+        rng = np.random.default_rng(2)
+        bs = [rng.standard_normal((48, 16)).astype(np.float32)
+              for _ in range(4)]
+
+        def serve(tracer):
+            reg = GraphRegistry(width_buckets=(16,), panel_buckets=(1, 4))
+            reg.register(a, name="g", ops=("spmm",))
+            eng = SparseEngine(reg, tracer=tracer)
+            rids = [eng.submit("g", "spmm", b=b) for b in bs]
+            out = eng.flush()
+            return [np.asarray(out[r]) for r in rids]
+
+        plain = serve(None)
+        tr = Tracer()
+        traced = serve(tr)
+        assert all(np.array_equal(p, t) for p, t in zip(plain, traced))
+        assert tr.roots       # something was actually recorded
+
+
+# ----------------------------------------------- engine lifecycle trace ---
+class TestEngineLifecycle:
+    def test_admit_to_complete_trace(self):
+        from repro.serve import GraphRegistry, SparseEngine
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(64, 48, avg_row=5.0, seed=1)
+        reg = GraphRegistry(width_buckets=(16,), panel_buckets=(1, 4))
+        reg.register(a, name="g", ops=("spmm",))
+        tr = Tracer()
+        eng = SparseEngine(reg, tracer=tr)
+        rng = np.random.default_rng(0)
+        rids = [eng.submit(
+            "g", "spmm",
+            b=rng.standard_normal((48, 16)).astype(np.float32))
+            for _ in range(3)]
+        eng.flush()
+        doc = json.loads(json.dumps(tr.to_chrome_trace()))
+        evs = doc["traceEvents"]
+        admits = [e for e in evs if e["name"] == "serve.admit"]
+        completes = [e for e in evs if e["name"] == "serve.complete"]
+        assert sorted(e["args"]["rid"] for e in admits) == sorted(rids)
+        assert sorted(e["args"]["rid"] for e in completes) == sorted(rids)
+        assert all(e["args"]["ok"] for e in completes)
+        names = {e["name"] for e in evs}
+        assert {"serve.flush", "serve.bucket", "serve.execute",
+                "serve.apply"} <= names
+        # every complete event happens inside the flush span
+        fl = next(e for e in evs if e["name"] == "serve.flush")
+        for e in completes:
+            assert fl["ts"] <= e["ts"] <= fl["ts"] + fl["dur"]
+
+    def test_engine_metrics_exposition(self):
+        from repro.serve import GraphRegistry, SparseEngine
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(64, 48, avg_row=5.0, seed=1)
+        reg = GraphRegistry(width_buckets=(16,), panel_buckets=(1, 4))
+        reg.register(a, name="g", ops=("spmm",))
+        eng = SparseEngine(reg)
+        rng = np.random.default_rng(0)
+        eng.submit("g", "spmm",
+                   b=rng.standard_normal((48, 16)).astype(np.float32))
+        eng.flush()
+        text = eng.metrics.exposition()
+        assert "serve_submitted_total 1" in text
+        assert "serve_served_total 1" in text
+        assert 'serve_applies_total{strategy="fast"} 1' in text
+        st = eng.stats()
+        assert st["submitted"] == 1 and isinstance(st["submitted"], int)
+        assert reg.stats()["registered_total"] == 1
+        assert "registry_registered_total 1" in reg.metrics.exposition()
+
+    def test_partition_gauges_published(self):
+        from repro.dist.partition import partition_spmm
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(128, 96, avg_row=6.0, seed=3)
+        partition_spmm(a, 2, tune="off")
+        m = default_registry()
+        assert m["dist_shards"].get(op="spmm") == 2
+        assert m["dist_nnz_max_over_mean"].get(op="spmm") >= 1.0
+
+
+# ------------------------------------------------------------ explain ---
+class TestExplain:
+    def _corpus(self):
+        from repro.sparse.generate import suitesparse_like_corpus
+
+        return suitesparse_like_corpus(n_small=4, seed=7)
+
+    REQUIRED = ("kind", "shape", "tc_fraction", "density_hist",
+                "segments", "padding", "occupancy")
+
+    def test_reports_all_quantities_for_corpus(self):
+        from repro.obs.explain import explain_spmm, render_table
+
+        for name, a in self._corpus().items():
+            rep = explain_spmm(a)
+            for key in self.REQUIRED:
+                assert key in rep, (name, key)
+            assert 0.0 <= rep["tc_fraction"] <= 1.0
+            assert len(rep["density_hist"]["vector_occupancy"]) == 8
+            assert rep["occupancy"]["pipeline_depth"] >= 1
+            assert 0.0 <= rep["padding"]["total_pad_frac"] <= 1.0
+            table = render_table(rep, title=name)
+            assert "tc_fraction" in table and name in table
+
+    def test_measured_side(self):
+        from repro.obs.explain import explain_spmm
+
+        name, a = next(iter(self._corpus().items()))
+        rep = explain_spmm(a, measure=True, width=16, reps=1)
+        assert rep["measured"]["wall_s"] > 0
+        # interpret-mode executables expose HLO text → flops/bytes
+        assert rep["measured"].get("hlo_flops", 0) >= 0
+
+    def test_sddmm_and_plan_paths(self):
+        from repro.core.sddmm import LibraSDDMM
+        from repro.obs.explain import explain_plan, explain_sddmm
+
+        name, a = next(iter(self._corpus().items()))
+        op = LibraSDDMM(a)
+        rep = explain_sddmm(op, a=a)
+        assert rep["kind"] == "sddmm"
+        rep2 = explain_plan(op.plan, cfg=op.tune_config)
+        assert rep2["kind"] == "sddmm"
+        assert rep2["density_hist"]["source"] == "tc_bitmap"
+
+    def test_explain_partition(self):
+        from repro.dist.partition import partition_spmm
+        from repro.obs.explain import explain_partition, render_table
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(128, 96, avg_row=6.0, seed=3)
+        part = partition_spmm(a, 2, tune="off")
+        rep = explain_partition(part)
+        assert rep["n_shards"] == 2
+        assert sum(rep["shard_nnz"]) == a.nnz
+        assert rep["halo_waste_frac"] >= 0.0
+        assert "halo_waste_frac" in render_table(rep)
+
+    def test_explain_registry_entry(self):
+        from repro.obs.explain import explain_entry
+        from repro.serve import GraphRegistry
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(64, 48, avg_row=5.0, seed=1)
+        reg = GraphRegistry(width_buckets=(16,), panel_buckets=(1, 4))
+        reg.register(a, name="g", ops=("spmm",))
+        rep = explain_entry(reg, "g", "spmm")
+        assert rep["kind"] == "spmm"
+        assert rep["registry"]["name"] == "g"
+
+
+# ------------------------------------------------------- trace overhead ---
+def test_disabled_span_overhead_is_small():
+    """The disabled path must stay within the same order of magnitude as
+    a bare function call (guards accidental allocation on the hot path);
+    the enabled-path tax is gated by the serve/obs_overhead bench row."""
+    import timeit as _t
+
+    tr = Tracer(enabled=False)
+
+    def instrumented():
+        with tr.span("x", a=1):
+            pass
+
+    def bare():
+        pass
+
+    t_ins = min(_t.repeat(instrumented, number=20000, repeat=3))
+    t_bare = min(_t.repeat(bare, number=20000, repeat=3))
+    assert t_ins < t_bare * 50 + 0.05   # generous CI headroom
