@@ -1,0 +1,102 @@
+# Calibration round-trip gate (the CI ``calibration`` step): record a
+# deterministic perf ledger over the full bench corpus, render the
+# calibration report, and check the drift detector both ways —
+#
+# * **no false positives**: every sample's wall time is the model's
+#   prediction times one constant factor (a perfectly stable "device"),
+#   so a drift flag here is a detector bug, not a perf change;
+# * **one true positive**: a synthetically drifted copy (newest half of
+#   one key slowed 4x) must flag exactly that key.
+#
+# Timestamps come from an injectable counter clock, so the gate is
+# reproducible — no wall-clock dependence at all.
+#
+# Usage:
+#   PYTHONPATH=src python -m benchmarks.check_calibration
+from __future__ import annotations
+
+import sys
+import tempfile
+
+# A stable device: measured wall = predicted * this, for every sample.
+DEVICE_FACTOR = 3.0
+SAMPLES_PER_MATRIX = 8      # ≥ calibrate.DRIFT_MIN_SAMPLES
+
+
+def main() -> None:
+    from benchmarks.common import corpus
+    from repro.core.spmm import LibraSpMM
+    from repro.obs.calibrate import (
+        calibration_report,
+        detect_drift,
+        render_calibration,
+    )
+    from repro.obs.ledger import PerfLedger, operator_sample
+
+    mats = corpus(8)
+    failures: list[str] = []
+    tick = iter(range(10 ** 9))
+
+    with tempfile.TemporaryDirectory() as d:
+        ledger = PerfLedger(d, clock=lambda: float(next(tick)))
+        for name, a in mats.items():
+            op = LibraSpMM(a, tune="model")
+            probe = operator_sample(op, "spmm", width=32,
+                                    dtype="float32", backend="xla",
+                                    wall_s=1.0, source="calibration")
+            wall = probe["predicted_s"] * DEVICE_FACTOR
+            for _ in range(SAMPLES_PER_MATRIX):
+                ledger.record(operator_sample(
+                    op, "spmm", width=32, dtype="float32", backend="xla",
+                    wall_s=wall, source="calibration"))
+
+        report = calibration_report(ledger)
+        print(render_calibration(report, title="bench-corpus calibration"))
+
+        if report["n_keys"] < len(mats):
+            failures.append(
+                f"coverage: {report['n_keys']} ledger keys < "
+                f"{len(mats)} corpus matrices")
+        for regime, stats in report["regimes"].items():
+            gm = stats["geomean_ratio"]
+            if abs(gm - DEVICE_FACTOR) > 1e-6 * DEVICE_FACTOR:
+                failures.append(
+                    f"calibration: regime {regime} geomean {gm!r} != "
+                    f"injected device factor {DEVICE_FACTOR}")
+
+        # Stable device → zero drift flags, at any sensible threshold.
+        flags = detect_drift(ledger)
+        if flags:
+            failures.append(
+                "drift false positive(s) on a stable device: "
+                + ", ".join(f["key"][:12] for f in flags))
+
+        # Positive control: slow the newest half of one key 4x; the
+        # detector must flag exactly that key.
+        samples = ledger.samples()
+        target = samples[-1]["key"]
+        drifted = []
+        seen = 0
+        for s in samples:
+            s = dict(s)
+            if s["key"] == target:
+                seen += 1
+                if seen > SAMPLES_PER_MATRIX // 2:
+                    s["wall_s"] *= 4.0
+            drifted.append(s)
+        flags = detect_drift(drifted)
+        if [f["key"] for f in flags] != [target]:
+            failures.append(
+                f"positive control: expected exactly [{target[:12]}...] "
+                f"flagged, got {[f['key'][:12] for f in flags]}")
+
+    print(f"\n{report['n_samples']} samples over {report['n_keys']} keys"
+          f" ({len(mats)} corpus matrices), {len(failures)} failure(s)")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,11 @@
 #   python -m benchmarks.run --only fig1,spmm,sddmm,serve --json-dir fresh
 #   python -m benchmarks.check_regression --baseline-dir . \
 #       --fresh-dir fresh --suites fig1,spmm,sddmm,serve
+#
+# ``--history BENCH_history.jsonl`` gates the *trajectory* instead: the
+# newest run's bars against the run before it (vacuously green with a
+# single run), printing the per-bar trend lines and which commit each
+# historical regression landed at (see benchmarks/history.py).
 from __future__ import annotations
 
 import argparse
@@ -21,8 +26,9 @@ import os
 import re
 import sys
 
-# "..._x1.37", "x0.62" (suffix form) or "0.42x" (gmean form).
-_BAR_SUFFIX = re.compile(r"(?:^|_)x(\d+(?:\.\d+)?)$")
+# "..._x1.37", "x0.62" (suffix form), "x0.86_vs_sequential" (the serve
+# suite's labeled form) or "0.42x" (gmean form).
+_BAR_SUFFIX = re.compile(r"(?:^|_)x(\d+(?:\.\d+)?)(?:_vs_[a-z_]+)?$")
 _BAR_PREFIX = re.compile(r"^(\d+(?:\.\d+)?)x$")
 
 
@@ -66,13 +72,46 @@ def compare(baseline: dict[str, float], fresh: dict[str, float],
     return failures, lines
 
 
+def check_history(path: str, tolerance: float) -> None:
+    """Trajectory mode: gate the newest history run against the one
+    before it, print trends + attribution, exit nonzero on regression
+    or an empty/corrupt history file."""
+    from benchmarks.history import attribute, load_history, render_trends
+
+    history = load_history(path)
+    if not history:
+        print(f"FAIL: no readable runs in {path}")
+        sys.exit(1)
+    print(render_trends(history, tolerance))
+    for r in attribute(history[:-1], tolerance):
+        # Historical context only — already-landed regressions don't
+        # re-fail every later run.
+        print(f"  (historical) {r['bar']}: x{r['from']:.2f} -> "
+              f"x{r['to']:.2f} at {r['prev_sha']} -> {r['sha']}")
+    if len(history) == 1:
+        print(f"\n1 run in history ({history[0].get('sha', '?')}); "
+              "nothing to gate against")
+        return
+    failures = attribute(history[-2:], tolerance)
+    prev, cur = history[-2], history[-1]
+    both = len(set(prev['bars']) & set(cur['bars']))
+    print(f"\ngated {cur.get('sha', '?')} against "
+          f"{prev.get('sha', '?')}: {both} bars, "
+          f"{len(failures)} regression(s)")
+    if failures:
+        for r in failures:
+            print(f"REGRESSION: {r['bar']} x{r['from']:.2f} -> "
+                  f"x{r['to']:.2f}")
+        sys.exit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", default=".",
                     help="directory holding the committed BENCH_*.json")
-    ap.add_argument("--fresh-dir", required=True,
+    ap.add_argument("--fresh-dir", default=None,
                     help="directory a fresh `benchmarks.run --json-dir` "
-                         "wrote to")
+                         "wrote to (required unless --history)")
     ap.add_argument("--suites", default="fig1,spmm,sddmm,serve",
                     help="comma-separated suite names to gate")
     ap.add_argument("--tolerance", type=float, default=0.15,
@@ -80,7 +119,16 @@ def main() -> None:
     ap.add_argument("--min-bars", type=int, default=1,
                     help="fail unless at least this many bars compared "
                          "(guards against silently comparing nothing)")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="gate a BENCH_history.jsonl trajectory instead "
+                         "of a fresh-vs-baseline pair")
     args = ap.parse_args()
+
+    if args.history is not None:
+        check_history(args.history, args.tolerance)
+        return
+    if args.fresh_dir is None:
+        ap.error("--fresh-dir is required (unless gating --history)")
 
     failures: list[str] = []
     compared = 0

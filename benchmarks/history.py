@@ -1,0 +1,213 @@
+"""Bench-history trajectory: BENCH_history.jsonl append + trend render.
+
+The committed ``BENCH_<suite>.json`` files are a *pairwise* gate (one
+baseline vs one fresh run); this module turns them into a *trajectory*:
+every bench run appends one JSONL record —
+
+    {"sha": "<git sha>", "date": "YYYY-MM-DD", "suites": [...],
+     "bars": {"<row name>": <speedup ratio>, ...}}
+
+— to ``BENCH_history.jsonl``, and :func:`render_trends` /
+:func:`attribute` answer the questions a pairwise gate can't: how has
+each bar moved across commits, and *which commit* moved it. Only ratio
+bars are tracked (see ``check_regression.parse_bar``): absolute
+microseconds don't transfer across machines, speedups do.
+
+CLI::
+
+    python -m benchmarks.history append --json-dir fresh \
+        --history BENCH_history.jsonl --suites fig1,spmm,sddmm,serve
+    python -m benchmarks.history show --history BENCH_history.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.check_regression import load_bars, parse_bar
+
+DEFAULT_SUITES = "fig1,spmm,sddmm,serve"
+
+
+def git_sha(cwd: str | None = None) -> str:
+    """Short HEAD sha, falling back to ``$GITHUB_SHA`` (detached CI
+    checkouts) and then ``"unknown"`` — a run outside a repo still
+    appends."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=cwd,
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except OSError:
+        pass
+    env = os.environ.get("GITHUB_SHA", "")
+    return env[:9] if env else "unknown"
+
+
+def bars_of_records(records: list[dict]) -> dict[str, float]:
+    """name → ratio bar over raw bench rows (``{name, derived}``)."""
+    out = {}
+    for row in records:
+        bar = parse_bar(str(row.get("derived", "")))
+        if bar is not None:
+            out[str(row["name"])] = bar
+    return out
+
+
+def _append(history_path: str, bars: dict, suites, sha, date) -> dict:
+    """One O_APPEND single-line write — same atomicity contract as the
+    perf ledger (concurrent CI shards interleave whole records)."""
+    rec = {
+        "sha": sha if sha is not None else git_sha(),
+        "date": (date if date is not None
+                 else datetime.date.today().isoformat()),
+        "suites": list(suites),
+        "bars": bars,
+    }
+    line = json.dumps(rec, sort_keys=True, separators=(",", ":")) + "\n"
+    parent = os.path.dirname(os.path.abspath(history_path))
+    os.makedirs(parent, exist_ok=True)
+    fd = os.open(history_path,
+                 os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+    try:
+        os.write(fd, line.encode())
+    finally:
+        os.close(fd)
+    return rec
+
+
+def append_records(history_path: str, records: list[dict], *,
+                   suites=None, sha: str | None = None,
+                   date: str | None = None) -> dict:
+    """Append one run (raw bench rows, the ``{name, derived}`` schema
+    ``benchmarks.run`` accumulates) to the history file; returns the
+    appended record."""
+    return _append(history_path, bars_of_records(records),
+                   sorted(suites) if suites else [], sha, date)
+
+
+def append_run(history_path: str, json_dir: str, *,
+               suites: str = DEFAULT_SUITES, sha: str | None = None,
+               date: str | None = None) -> dict:
+    """Append the bars of a ``--json-dir`` run's ``BENCH_<suite>.json``
+    files as one history record."""
+    bars: dict[str, float] = {}
+    present = []
+    for suite in (s for s in suites.split(",") if s):
+        path = os.path.join(json_dir, f"BENCH_{suite}.json")
+        if not os.path.exists(path):
+            continue
+        present.append(suite)
+        bars.update(load_bars(path))
+    return _append(history_path, bars, present, sha, date)
+
+
+def load_history(path: str) -> list[dict]:
+    """All runs in append order; corrupt lines are skipped."""
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError:
+        return []
+    out = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            doc = json.loads(line)
+        except ValueError:
+            continue
+        if isinstance(doc, dict) and isinstance(doc.get("bars"), dict):
+            out.append(doc)
+    return out
+
+
+def attribute(history: list[dict],
+              tolerance: float = 0.15) -> list[dict]:
+    """Regression attribution: for every bar, every consecutive-run drop
+    beyond ``tolerance`` — *which commit* regressed it. Returns
+    ``[{bar, sha, prev_sha, from, to}]`` in run order."""
+    regs = []
+    for prev, cur in zip(history, history[1:]):
+        for name in sorted(set(prev["bars"]) & set(cur["bars"])):
+            old, new = float(prev["bars"][name]), float(cur["bars"][name])
+            if new < old * (1.0 - tolerance):
+                regs.append({"bar": name, "sha": cur.get("sha", "?"),
+                             "prev_sha": prev.get("sha", "?"),
+                             "from": old, "to": new})
+    return regs
+
+
+def render_trends(history: list[dict],
+                  tolerance: float = 0.15) -> str:
+    """Per-bar trend lines across runs, with regressing steps marked.
+
+    One line per bar: ``name | x1.00 -> x1.30 -> !x0.70`` (``!`` marks a
+    step that dropped beyond ``tolerance`` vs the previous run; ``-``
+    marks a run missing that bar).
+    """
+    if not history:
+        return "(empty history)"
+    bars = sorted({n for run in history for n in run["bars"]})
+    head = " -> ".join(f"{run.get('sha', '?')}" for run in history)
+    w = max(len(n) for n in bars)
+    lines = [f"{'(run)':>{w}} | {head}"]
+    for name in bars:
+        steps, prev = [], None
+        for run in history:
+            v = run["bars"].get(name)
+            if v is None:
+                steps.append("-")
+                continue
+            mark = ("!" if prev is not None
+                    and v < prev * (1.0 - tolerance) else "")
+            steps.append(f"{mark}x{v:.2f}")
+            prev = v
+        lines.append(f"{name:>{w}} | {' -> '.join(steps)}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_append = sub.add_parser(
+        "append", help="append a --json-dir run's bars to the history")
+    ap_append.add_argument("--history", default="BENCH_history.jsonl")
+    ap_append.add_argument("--json-dir", required=True)
+    ap_append.add_argument("--suites", default=DEFAULT_SUITES)
+    ap_append.add_argument("--sha", default=None)
+    ap_append.add_argument("--date", default=None)
+    ap_show = sub.add_parser(
+        "show", help="render per-bar trends + regression attribution")
+    ap_show.add_argument("--history", default="BENCH_history.jsonl")
+    ap_show.add_argument("--tolerance", type=float, default=0.15)
+    args = ap.parse_args()
+
+    if args.cmd == "append":
+        rec = append_run(args.history, args.json_dir, suites=args.suites,
+                         sha=args.sha, date=args.date)
+        print(f"appended {rec['sha']} ({len(rec['bars'])} bars, "
+              f"suites {','.join(rec['suites']) or '-'}) "
+              f"to {args.history}")
+        return
+    history = load_history(args.history)
+    if not history:
+        print(f"no runs in {args.history}")
+        sys.exit(1)
+    print(render_trends(history, args.tolerance))
+    regs = attribute(history, args.tolerance)
+    if regs:
+        print()
+        for r in regs:
+            print(f"REGRESSED {r['bar']}: x{r['from']:.2f} -> "
+                  f"x{r['to']:.2f} at {r['prev_sha']} -> {r['sha']}")
+
+
+if __name__ == "__main__":
+    main()

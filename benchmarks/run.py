@@ -25,6 +25,9 @@ def main() -> None:
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="trace every suite and write one Perfetto/"
                          "Chrome-trace TRACE_<suite>.json per suite")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append this run's ratio bars (+ git sha/date) "
+                         "to a BENCH_history.jsonl trajectory file")
     args = ap.parse_args()
     from benchmarks import (
         bench_ablations,
@@ -111,6 +114,14 @@ def main() -> None:
                                    f"BENCH_{suite}.json"), "w") as f:
                 json.dump(recs, f, indent=1)
                 f.write("\n")
+    if args.history:
+        from benchmarks.history import append_records
+
+        rec = append_records(args.history, records,
+                             suites=sorted(by_suite))
+        print(f"history: appended {rec['sha']} "
+              f"({len(rec['bars'])} bars) to {args.history}",
+              file=sys.stderr)
     if failed:
         sys.exit(1)
 

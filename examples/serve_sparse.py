@@ -20,14 +20,19 @@ breaker/degradation accounting.
 The whole demo runs under a :class:`~repro.obs.trace.Tracer`: at the
 end it prints the engine's Prometheus exposition and dumps the full
 request lifecycle (``serve.admit`` → ``serve.flush`` → ``bucket`` →
-``execute`` → ``apply`` → ``serve.complete``) as a Chrome-trace JSON
-you can open in Perfetto.
+``execute`` → ``apply`` → ``serve.complete``, linked per request by
+Perfetto flow events) as a Chrome-trace JSON you can open in Perfetto
+— then scrapes the same metrics back over HTTP from the engine's
+zero-dependency observability endpoint
+(:meth:`~repro.serve.engine.SparseEngine.serve_http`: ``/metrics``,
+``/health``, ``/explain/<graph>``).
 
     PYTHONPATH=src python examples/serve_sparse.py
 """
 import json
 import os
 import tempfile
+import urllib.request
 
 import numpy as np
 import jax
@@ -157,8 +162,32 @@ def main() -> None:
     admits = sum(e["name"] == "serve.admit" for e in trace["traceEvents"])
     completes = sum(
         e["name"] == "serve.complete" for e in trace["traceEvents"])
+    flows = sum(e.get("cat") == "repro.flow"
+                for e in trace["traceEvents"])
     print(f"\nwrote {len(trace['traceEvents'])}-event Perfetto trace "
-          f"({admits} admits, {completes} completes) to {path}")
+          f"({admits} admits, {completes} completes, {flows} flow "
+          f"events) to {path}")
+
+    # --- the same metrics, scraped over HTTP: what a Prometheus
+    #     scraper (or an on-call engineer with curl) sees
+    with engine.serve_http() as srv:
+        scraped = urllib.request.urlopen(
+            f"{srv.url}/metrics", timeout=10).read().decode()
+        health = json.loads(urllib.request.urlopen(
+            f"{srv.url}/health", timeout=10).read().decode())
+        explain = json.loads(urllib.request.urlopen(
+            f"{srv.url}/explain/tenantB/fem", timeout=10).read().decode())
+    served_line = next(line for line in scraped.splitlines()
+                       if line.startswith("serve_served_total"))
+    print(f"\nscraped {srv.url}/metrics: "
+          f"{len(scraped.splitlines())} exposition lines "
+          f"({served_line})")
+    print(f"/health: deadline miss rate "
+          f"{health['deadline']['miss_rate']:.2f}, "
+          f"breakers {sorted(health['breakers'])}")
+    print(f"/explain/tenantB/fem: tc_fraction "
+          f"{explain['tc_fraction']:.2f}, "
+          f"pipeline depth {explain['occupancy']['pipeline_depth']}")
     print("serve_sparse OK")
 
 

@@ -23,6 +23,7 @@ from repro.core import preprocess
 from repro.core.formats import SDDMMPlan, device_arrays
 from repro.core.spmm import Mode
 from repro.kernels.ops import cached_compile, sddmm_apply
+from repro.obs.ledger import apply_sampler
 from repro.sparse.matrix import SparseCSR
 from repro.tune import TuneConfig, tune_sddmm
 
@@ -65,6 +66,13 @@ class LibraSDDMM:
         # Per-operator AOT apply cache keyed (kf, dtype, backend, ...) —
         # see kernels.ops.cached_compile.
         self._apply_cache: dict = {}
+        # Perf-ledger context (see LibraSpMM): untouched unless a ledger
+        # is active.
+        self._a = a
+        self._tune_ctx = dict(
+            mode=mode, tune=tune if isinstance(tune, str) else None,
+            threshold=forced, bk=bk, ts_tile=ts_tile, width=tune_kf,
+            dtype="float32", backend=tune_backend)
 
     def __call__(self, x: jnp.ndarray, y: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
@@ -75,7 +83,9 @@ class LibraSDDMM:
              x.shape[0], y.shape[0]),
             lambda: sddmm_apply.lower(self.arrays, x, y, nnz=self.nnz,
                                       backend=backend, cfg=self.tune_config,
-                                      interpret=interpret))
+                                      interpret=interpret),
+            sample=apply_sampler(self, "sddmm", width=x.shape[1],
+                                 dtype=str(x.dtype), backend=backend))
         return fn(self.arrays, x, y)
 
     @property

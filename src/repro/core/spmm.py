@@ -44,6 +44,7 @@ from repro.core import preprocess
 from repro.core.formats import WINDOW, SpMMPlan, device_arrays
 from repro.core.windows import num_windows
 from repro.kernels.ops import cached_compile, spmm_apply
+from repro.obs.ledger import apply_sampler
 from repro.sparse.matrix import SparseCSR
 from repro.tune import TuneConfig, tune_spmm
 
@@ -86,6 +87,15 @@ class LibraSpMM:
         # Per-operator AOT apply cache keyed (n, dtype, backend, ...) —
         # see kernels.ops.cached_compile.
         self._apply_cache: dict = {}
+        # Perf-ledger context: the matrix (a free reference — plans
+        # already hold its arrays) and the tune-resolution inputs, so
+        # recorded samples can carry the PlanCache key drift staling
+        # targets. Nothing here is touched unless a ledger is active.
+        self._a = a
+        self._tune_ctx = dict(
+            mode=mode, tune=tune if isinstance(tune, str) else None,
+            threshold=forced, bk=bk, ts_tile=ts_tile, width=tune_n,
+            dtype="float32", backend=tune_backend)
 
     def __call__(self, b: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
@@ -96,7 +106,9 @@ class LibraSpMM:
             lambda: spmm_apply.lower(self.arrays, b, m=self.m,
                                      nwin=self.nwin, backend=backend,
                                      cfg=self.tune_config,
-                                     interpret=interpret))
+                                     interpret=interpret),
+            sample=apply_sampler(self, "spmm", width=b.shape[1],
+                                 dtype=str(b.dtype), backend=backend))
         return fn(self.arrays, b)
 
     @property

@@ -100,7 +100,7 @@ def classify_apply_error(exc: BaseException) -> str:
     return "runtime"
 
 
-def cached_compile(cache: dict, key, lower):
+def cached_compile(cache: dict, key, lower, sample=None):
     """Per-operator AOT apply cache: one compiled executable per key.
 
     Repeated calls invoke the executable directly, skipping jit dispatch
@@ -109,7 +109,14 @@ def cached_compile(cache: dict, key, lower):
     returning the lowered-but-uncompiled computation. Compile failures
     surface as :class:`ApplyError` (stage ``"compile"``) with nothing
     installed in the cache.
+
+    ``sample`` (a ``(wall_s) -> None`` callable, usually from
+    :func:`repro.obs.ledger.apply_sampler`) opts this executable into
+    perf-ledger recording: each invocation is timed to completion
+    (``block_until_ready``) and the wall seconds handed to ``sample``.
     """
+    import time
+
     from repro.obs.trace import get_tracer
 
     tr = get_tracer()
@@ -120,15 +127,27 @@ def cached_compile(cache: dict, key, lower):
                 fn = cache[key] = lower().compile()
         except Exception as exc:
             raise ApplyError("compile", key, exc) from exc
-    if not tr.enabled:
+    if not tr.enabled and sample is None:
         return fn
 
-    # Enabled-tracer path only: the executable stays raw in the cache
+    # Instrumented path only: the executable stays raw in the cache
     # (warm()/hit accounting and explain read it directly); callers get
-    # a thin wrapper that times each invocation.
+    # a thin wrapper that times each invocation. Ledger sampling blocks
+    # on the result — async dispatch would time the enqueue, not the
+    # kernel — which is why it is opt-in per call site.
     def traced(*args, **kw):
-        with tr.span("kernels.execute", key=str(key)):
+        sp = tr.span("kernels.execute", key=str(key)).open() \
+            if tr.enabled else None
+        try:
+            if sample is not None:
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(fn(*args, **kw))
+                sample(time.perf_counter() - t0)
+                return out
             return fn(*args, **kw)
+        finally:
+            if sp is not None:
+                sp.close()
 
     return traced
 

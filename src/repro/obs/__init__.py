@@ -1,16 +1,27 @@
-"""repro.obs — zero-dependency observability: spans, metrics, explain.
+"""repro.obs — zero-dependency observability: spans, metrics, explain,
+perf ledger, calibration, scrape endpoint.
 
-Three pieces (see the module docstrings for depth):
+Six pieces (see the module docstrings for depth):
 
 * :mod:`repro.obs.trace` — nestable spans with an injectable clock,
-  Chrome-trace/Perfetto + dict-tree exporters, and a disabled process
-  default so instrumented hot paths cost one attribute check.
+  Chrome-trace/Perfetto + dict-tree exporters (flow events link a serve
+  request's lifecycle), and a disabled process default so instrumented
+  hot paths cost one attribute check.
 * :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
   labeled series, Prometheus text exposition and JSON snapshot;
   ``SparseEngine``/``GraphRegistry``/``PlanCache`` report into it.
+  :class:`NullMetricsRegistry` is the write-discarding variant.
 * :mod:`repro.obs.explain` — plan/execution explainer for the paper's
   structural quantities (TC fraction, segment balance, padding waste,
   predicted vs measured occupancy).
+* :mod:`repro.obs.ledger` — persistent JSONL store of measured apply
+  samples (wall time joined to the cost model's prediction), recorded
+  from operator applies, search candidates, and engine sampling.
+* :mod:`repro.obs.calibrate` — per-regime model-error reports over the
+  ledger, plus the drift detector whose flags stale PlanCache entries
+  (the re-tune trigger).
+* :mod:`repro.obs.serve_http` — stdlib scrape endpoint (``/metrics``,
+  ``/health``, ``/explain/<graph>``) for a running engine.
 
 Exports resolve lazily (PEP 562) so ``import repro.obs`` stays cheap
 and free of jax imports until an explain function is actually called.
@@ -28,6 +39,7 @@ _LAZY = {
     "Gauge": "repro.obs.metrics",
     "Histogram": "repro.obs.metrics",
     "MetricsRegistry": "repro.obs.metrics",
+    "NullMetricsRegistry": "repro.obs.metrics",
     "DEFAULT_BUCKETS": "repro.obs.metrics",
     "default_registry": "repro.obs.metrics",
     "explain_plan": "repro.obs.explain",
@@ -36,6 +48,19 @@ _LAZY = {
     "explain_entry": "repro.obs.explain",
     "explain_partition": "repro.obs.explain",
     "render_table": "repro.obs.explain",
+    "PerfLedger": "repro.obs.ledger",
+    "get_ledger": "repro.obs.ledger",
+    "set_ledger": "repro.obs.ledger",
+    "use_ledger": "repro.obs.ledger",
+    "ledger_key": "repro.obs.ledger",
+    "config_digest": "repro.obs.ledger",
+    "record_apply": "repro.obs.ledger",
+    "calibration_report": "repro.obs.calibrate",
+    "render_calibration": "repro.obs.calibrate",
+    "detect_drift": "repro.obs.calibrate",
+    "apply_drift": "repro.obs.calibrate",
+    "ObsHTTPServer": "repro.obs.serve_http",
+    "serve_obs_http": "repro.obs.serve_http",
 }
 
 __all__ = sorted(_LAZY)

@@ -26,6 +26,7 @@ instrumentation (kernel compiles, dist partition gauges).
 from __future__ import annotations
 
 import math
+import time
 
 
 def _check_labels(declared: tuple, got: dict, name: str) -> tuple:
@@ -138,6 +139,28 @@ DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
                    0.5, 1.0, 2.5, 5.0, 10.0)
 
 
+class _HistogramTimer:
+    """Context manager from :meth:`Histogram.time`: observes elapsed
+    wall seconds on exit and keeps them readable as ``.elapsed`` (for
+    callers that also feed a counter from the same measurement)."""
+
+    __slots__ = ("_hist", "_label_values", "_t0", "elapsed")
+
+    def __init__(self, hist, label_values: dict):
+        self._hist = hist
+        self._label_values = label_values
+        self.elapsed = 0.0
+
+    def __enter__(self) -> "_HistogramTimer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.elapsed = time.perf_counter() - self._t0
+        self._hist.observe(self.elapsed, **self._label_values)
+        return False
+
+
 class Histogram:
     """Cumulative-bucket histogram (Prometheus semantics: ``le`` upper
     bounds, implicit ``+Inf``, plus ``_sum``/``_count``)."""
@@ -182,6 +205,14 @@ class Histogram:
                if self.labels else ())
         cell = self._series.get(key)
         return cell[-1] if cell else 0.0
+
+    def time(self, **label_values) -> _HistogramTimer:
+        """Timing context manager: ``with h.time(): ...`` observes the
+        block's wall seconds on exit (the replacement for hand-rolled
+        ``perf_counter`` pairs feeding :meth:`observe`)."""
+        if self.labels:
+            _check_labels(self.labels, label_values, self.name)
+        return _HistogramTimer(self, label_values)
 
     def _lines(self) -> list[str]:
         out = []
@@ -274,6 +305,56 @@ class MetricsRegistry:
         """JSON-able dict: name → {type, help, value|series}."""
         return {name: {"type": m.kind, "help": m.help, **m._snap()}
                 for name, m in sorted(self._metrics.items())}
+
+
+class _NullCounter(Counter):
+    """Write-discarding counter: reads keep working (zeros)."""
+
+    def inc(self, amount: float = 1.0, **label_values) -> None:
+        pass
+
+
+class _NullGauge(Gauge):
+    def inc(self, amount: float = 1.0, **label_values) -> None:
+        pass
+
+    def set(self, value: float, **label_values) -> None:
+        pass
+
+
+class _NullHistogram(Histogram):
+    def observe(self, value: float, **label_values) -> None:
+        pass
+
+    def time(self, **label_values) -> _HistogramTimer:
+        # Still measures (callers read .elapsed) but discards the
+        # observation — _NullHistogram.observe above is a no-op.
+        return super().time(**label_values)
+
+
+class NullMetricsRegistry(MetricsRegistry):
+    """A registry handing out write-discarding instruments.
+
+    The metrics analogue of a disabled Tracer: components built against
+    it keep their instrument handles and thin ``stats()`` views (reads
+    return zeros/empty series), but every ``inc``/``set``/``observe``
+    is a no-op. Used to price the always-on metrics path (the
+    ``serve/metrics_overhead`` bench row) and to opt a latency-critical
+    engine out of accounting entirely.
+    """
+
+    def counter(self, name: str, help: str = "",
+                labels: tuple = ()) -> Counter:
+        return self._get_or_create(_NullCounter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: tuple = ()) -> Gauge:
+        return self._get_or_create(_NullGauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "", labels: tuple = (),
+                  buckets: tuple = DEFAULT_BUCKETS) -> Histogram:
+        return self._get_or_create(_NullHistogram, name, help, labels,
+                                   buckets=buckets)
 
 
 _DEFAULT = MetricsRegistry()

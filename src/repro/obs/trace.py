@@ -189,32 +189,70 @@ class Tracer:
     def to_chrome_trace(self, *, pid: int = 1, tid: int = 1) -> dict:
         """Chrome-trace / Perfetto JSON: ``{"traceEvents": [...]}`` of
         complete (``ph="X"``) span events and instant (``ph="i"``)
-        annotations, timestamps in µs relative to the first span."""
+        annotations, timestamps in µs relative to the first span.
+
+        Spans/events carrying the reserved ``flow_id`` attribute (or
+        ``flow_ids``, a list — e.g. one execute span serving many
+        request ids) are additionally linked with Chrome-trace *flow
+        events* (``ph`` ``s``/``t``/``f`` sharing a ``cat``+``id``):
+        Perfetto draws an arrow through every point of the same flow, so
+        a request's ``serve.admit`` → ``serve.execute`` →
+        ``serve.complete`` lifecycle reads as one connected track. The
+        reserved keys are stripped from the exported ``args``."""
         t0 = self._epoch()
         out: list[dict] = []
+        flows: dict[Any, list[float]] = {}
+
+        def note_flow(attrs: dict, ts: float) -> None:
+            ids = attrs.get("flow_ids", ())
+            if "flow_id" in attrs:
+                ids = list(ids) + [attrs["flow_id"]]
+            for fid in ids:
+                flows.setdefault(fid, []).append(ts)
+
+        def args_of(attrs: dict) -> dict:
+            return {k: _jsonable(v) for k, v in attrs.items()
+                    if k not in ("flow_id", "flow_ids")}
 
         def emit(sp: Span) -> None:
             end = sp.t1 if sp.t1 is not None else sp.t0
+            ts = round((sp.t0 - t0) * 1e6, 3)
+            note_flow(sp.attrs, ts)
             out.append({
                 "name": sp.name, "ph": "X", "cat": "repro",
-                "ts": round((sp.t0 - t0) * 1e6, 3),
+                "ts": ts,
                 "dur": round((end - sp.t0) * 1e6, 3),
                 "pid": pid, "tid": tid,
-                "args": {k: _jsonable(v) for k, v in sp.attrs.items()},
+                "args": args_of(sp.attrs),
             })
             for e in sp.events:
+                ets = round((e["t"] - t0) * 1e6, 3)
+                note_flow(e["attrs"], ets)
                 out.append({
                     "name": e["name"], "ph": "i", "cat": "repro",
-                    "ts": round((e["t"] - t0) * 1e6, 3),
+                    "ts": ets,
                     "pid": pid, "tid": tid, "s": "t",
-                    "args": {k: _jsonable(v) for k, v in
-                             e["attrs"].items()},
+                    "args": args_of(e["attrs"]),
                 })
             for c in sp.children:
                 emit(c)
 
         for sp in self.roots:
             emit(sp)
+        for seq, fid in enumerate(sorted(flows, key=str)):
+            points = sorted(flows[fid])
+            if len(points) < 2:
+                continue        # a flow needs something to connect
+            last = len(points) - 1
+            for i, ts in enumerate(points):
+                ev = {
+                    "name": str(fid), "cat": "repro.flow", "id": seq,
+                    "ph": "s" if i == 0 else ("f" if i == last else "t"),
+                    "ts": ts, "pid": pid, "tid": tid,
+                }
+                if i == last:
+                    ev["bp"] = "e"     # bind the finish to the enclosing slice
+                out.append(ev)
         return {"traceEvents": out, "displayTimeUnit": "ms"}
 
 

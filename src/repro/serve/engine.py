@@ -69,9 +69,11 @@ import dataclasses
 import time
 from collections import defaultdict
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import classify_apply_error, sddmm_apply, spmm_apply
+from repro.obs.ledger import record_apply
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import get_tracer
 from repro.serve.registry import GraphRegistry
@@ -135,7 +137,8 @@ class SparseEngine:
                  faults=None, flush_at_depth: int | None = None,
                  flush_slack_ms: float | None = None,
                  clock=time.monotonic, sleep=time.sleep,
-                 metrics: MetricsRegistry | None = None, tracer=None):
+                 metrics: MetricsRegistry | None = None, tracer=None,
+                 ledger=None, sample_every: int | None = None):
         self.registry = registry
         self.max_queue = max_queue
         self.max_panel = (max(registry.panel_buckets)
@@ -156,6 +159,13 @@ class SparseEngine:
         self._next_rid = 0
         self._next_deadline: float | None = None
         self._breakers: dict[tuple, CircuitBreaker] = {}
+        # Opt-in perf-ledger sampling: every ``sample_every``-th packed
+        # SpMM apply (plain batched path only) is timed to completion
+        # and recorded into ``ledger`` (a repro.obs.ledger.PerfLedger).
+        # Off by default — the fast path pays one attribute check.
+        self._ledger = ledger
+        self._sample_every = (int(sample_every) if sample_every else 0)
+        self._apply_seq = 0
         # Every lifecycle counter lives on the metrics registry;
         # stats()/health() stay thin dict views over the instruments.
         self.metrics = MetricsRegistry() if metrics is None else metrics
@@ -215,6 +225,8 @@ class SparseEngine:
         self._deadline_slack = m.histogram(
             "serve_deadline_slack_seconds",
             "Deadline slack (deadline − now) at execution time")
+        self._flush_hist = m.histogram(
+            "serve_flush_seconds", "Wall seconds per flush call")
         self._breaker_gauge = m.gauge(
             "serve_breaker_state",
             "Circuit-breaker state (0 closed, 1 half-open, 2 open)",
@@ -251,7 +263,9 @@ class SparseEngine:
             rid = self._submit(graph, op, b=b, x=x, y=y,
                                edge_vals=edge_vals,
                                deadline_ms=deadline_ms)
-            sp.set(rid=rid)
+            # flow_id links this request's admit → execute → complete
+            # spans into one Perfetto flow (see to_chrome_trace).
+            sp.set(rid=rid, flow_id=f"rid{rid}")
             return rid
 
     def _submit(self, graph: str, op: str, *, b=None, x=None, y=None,
@@ -355,31 +369,32 @@ class SparseEngine:
         if not pending:
             return results
         tr = self.tracer
-        t0 = time.perf_counter()
-        with tr.span("serve.flush", requests=len(pending)):
-            with tr.span("serve.bucket"):
-                buckets: dict[tuple, list[SparseRequest]] = \
-                    defaultdict(list)
-                for r in pending:
-                    key = (r.graph, r.op, r.bucket_width,
-                           str(r.payload[0].dtype),
-                           r.edge_vals is not None)
-                    buckets[key].append(r)
-            for key in sorted(buckets, key=str):
-                reqs = buckets[key]
-                for i in range(0, len(reqs), self.max_panel):
-                    chunk = reqs[i:i + self.max_panel]
-                    self._execute(key, chunk, results)
-                    if tr.enabled:
-                        for r in chunk:
-                            if r.rid in results:
-                                tr.event(
-                                    "serve.complete", rid=r.rid,
-                                    ok=not isinstance(results[r.rid],
-                                                      ServeError))
+        with self._flush_hist.time() as timing:
+            with tr.span("serve.flush", requests=len(pending)):
+                with tr.span("serve.bucket"):
+                    buckets: dict[tuple, list[SparseRequest]] = \
+                        defaultdict(list)
+                    for r in pending:
+                        key = (r.graph, r.op, r.bucket_width,
+                               str(r.payload[0].dtype),
+                               r.edge_vals is not None)
+                        buckets[key].append(r)
+                for key in sorted(buckets, key=str):
+                    reqs = buckets[key]
+                    for i in range(0, len(reqs), self.max_panel):
+                        chunk = reqs[i:i + self.max_panel]
+                        self._execute(key, chunk, results)
+                        if tr.enabled:
+                            for r in chunk:
+                                if r.rid in results:
+                                    tr.event(
+                                        "serve.complete", rid=r.rid,
+                                        flow_id=f"rid{r.rid}",
+                                        ok=not isinstance(results[r.rid],
+                                                          ServeError))
         self._stats["flushes"].inc()
         self._stats["served"].inc(len(pending))
-        self._stats["serve_time_s"].inc(time.perf_counter() - t0)
+        self._stats["serve_time_s"].inc(timing.elapsed)
         return results
 
     def serve(self, submissions) -> dict[int, jnp.ndarray | ServeError]:
@@ -426,16 +441,30 @@ class SparseEngine:
         st["panel_slots"].inc(p)
         st["real_panels"].inc(c)
 
-    def _call(self, fn, cache, *args, _site=None, **kw):
+    def _call(self, fn, cache, *args, _site=None, _sample=None, **kw):
         """One executable invocation: fault-plan tick, cache-hit
-        accounting, optional NaN poisoning and non-finite screening."""
+        accounting, optional NaN poisoning and non-finite screening.
+
+        ``_sample`` (a ``(wall_s) -> None`` recorder) opts this call
+        into the engine's every-Nth perf-ledger sampling: on a taken
+        sample the apply is timed to completion (``block_until_ready``
+        — async dispatch would time the enqueue, not the kernel)."""
         nan = (self.faults.check(*_site)
                if self.faults is not None and _site is not None else None)
         strategy = _site[2] if _site is not None else "fast"
         self._applies.inc(strategy=strategy)
+        take = False
+        if _sample is not None and self._sample_every:
+            self._apply_seq += 1
+            take = self._apply_seq % self._sample_every == 0
         before = len(cache)
         with self.tracer.span("serve.apply", strategy=strategy):
-            out = fn(*args, **kw)
+            if take:
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(fn(*args, **kw))
+                _sample(time.perf_counter() - t0)
+            else:
+                out = fn(*args, **kw)
         if len(cache) > before:
             self._stats["exec_cache_misses"].inc()
         else:
@@ -468,10 +497,15 @@ class SparseEngine:
 
     # ------------------------------------------------------- fast path ---
     def _pack_spmm(self, entry, apply_one, cache, chunk, w, results,
-                   limit, site) -> None:
+                   limit, site, sample_op=None) -> None:
         """Column-pack ``chunk`` into ``(k, p·w)`` applies, at most
         ``limit`` panels per apply (sub-chunks and the trailing batch
-        pad stay on the panel-bucket grid for executable reuse)."""
+        pad stay on the panel-bucket grid for executable reuse).
+
+        ``sample_op`` (the underlying :class:`LibraSpMM`, plain batched
+        path only) enables the engine's every-Nth ledger sampling for
+        these applies — each taken sample records the *packed* width, so
+        measured and predicted time price the same executable."""
         reg = self.registry
         st = self._stats
         tr = self.tracer
@@ -486,7 +520,15 @@ class SparseEngine:
                                            parts[0].dtype))
                 wide = parts[0] if len(parts) == 1 else jnp.concatenate(
                     parts, axis=1)
-            out = self._call(apply_one, cache, wide, _site=site)
+            sampler = None
+            if sample_op is not None:
+                def sampler(wall_s, _pw=int(wide.shape[1]),
+                            _dt=str(wide.dtype)):
+                    record_apply(sample_op, "spmm", width=_pw, dtype=_dt,
+                                 backend=reg.backend, wall_s=wall_s,
+                                 source="engine", ledger=self._ledger)
+            out = self._call(apply_one, cache, wide, _site=site,
+                             _sample=sampler)
             for j, r in enumerate(sub):
                 results[r.rid] = out[:, j * w:j * w + r.width]
             self._account_exec(apply_one, p, cs)
@@ -499,7 +541,8 @@ class SparseEngine:
         fast path already answered keep their results."""
         graph, op, w, _dtype, _has_ev = key
         with self.tracer.span("serve.execute", graph=graph, op=op,
-                              width=w, requests=len(chunk)):
+                              width=w, requests=len(chunk),
+                              flow_ids=[f"rid{r.rid}" for r in chunk]):
             self._execute_chunk(key, chunk, results)
 
     def _execute_chunk(self, key, chunk, results) -> None:
@@ -617,8 +660,15 @@ class SparseEngine:
                 return single(b, backend=reg.backend,
                               interpret=reg.interpret)
 
+            # Batched SDDMM stacks and sharded applies are excluded from
+            # ledger sampling: their wall time covers p vmapped panels /
+            # a shard_map dispatch, which would pollute the per-plan
+            # measured-vs-predicted ratio the calibrator joins on.
+            sample_op = (single if self._ledger is not None
+                         and self._sample_every else None)
             self._pack_spmm(entry, apply_one, single._apply_cache, chunk,
-                            w, results, reg.pack_limit(entry, w), site)
+                            w, results, reg.pack_limit(entry, w), site,
+                            sample_op=sample_op)
             return
         # ---- sddmm ----
         if entry.sharded:
@@ -820,3 +870,13 @@ class SparseEngine:
             "faults_injected": (len(self.faults.log)
                                 if self.faults is not None else 0),
         }
+
+    def serve_http(self, host: str = "127.0.0.1", port: int = 0):
+        """Start (and return) a scrapeable observability endpoint for
+        this engine — ``/metrics`` (Prometheus exposition), ``/health``,
+        ``/explain/<graph>`` — on a daemon thread; see
+        :class:`repro.obs.serve_http.ObsHTTPServer`. Port 0 binds an
+        ephemeral port (read it back from ``.port``/``.url``)."""
+        from repro.obs.serve_http import ObsHTTPServer
+
+        return ObsHTTPServer(self, host=host, port=port).start()

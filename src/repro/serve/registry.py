@@ -127,6 +127,9 @@ class GraphRegistry:
             "registry_registered_total", "Distinct graphs ever built")
         self._resident = m.gauge(
             "registry_graphs_resident", "Graphs currently resident")
+        self._invalidations = m.counter(
+            "registry_invalidations_total",
+            "Graphs dropped by drift invalidation")
 
     # ------------------------------------------------------------ admit ---
     def register(self, a: SparseCSR, *, name: str | None = None,
@@ -300,6 +303,25 @@ class GraphRegistry:
         entry.warmed += compiled
         return compiled
 
+    def invalidate(self, signature: str) -> int:
+        """Drop every resident entry for a sparsity ``signature``
+        (:func:`~repro.tune.cache.matrix_signature`), unbinding its
+        aliases. The drift feedback path: after
+        :func:`repro.obs.calibrate.apply_drift` stales a tune-cache key,
+        invalidating the signature forces the next registration to
+        rebuild — and hence re-tune — instead of reusing the resident
+        executables. Returns how many entries were dropped."""
+        doomed = [key for key in self._entries
+                  if key.startswith(signature + ":")]
+        for key in doomed:
+            old = self._entries.pop(key)
+            for alias in old.names:
+                if self._names.get(alias) == key:
+                    self._names.pop(alias)
+            self._invalidations.inc()
+        self._resident.set(len(self._entries))
+        return len(doomed)
+
     # ------------------------------------------------------------ stats ---
     def width_bucket(self, width: int) -> int | None:
         """Smallest width bucket holding ``width`` (None = too wide)."""
@@ -336,6 +358,7 @@ class GraphRegistry:
             "registered_total": self._registered_total.value,
             "reuse_hits": self._reuse_hits.value,
             "evictions": self._evictions.value,
+            "invalidations": self._invalidations.value,
             "plan_cache_hits": sum(e.plan_cache_hits
                                    for e in self._entries.values()),
             "warmed_executables": sum(e.warmed

@@ -118,6 +118,12 @@ class PlanCache:
         self._quarantined_bytes = m.counter(
             "tune_cache_quarantined_bytes_total",
             "Bytes of corrupt entries moved to quarantine")
+        self._stale_marked = m.counter(
+            "tune_cache_stale_marked_total",
+            "Entries marked stale by drift feedback")
+        self._stale_misses = m.counter(
+            "tune_cache_stale_misses_total",
+            "Lookups that dropped a drift-staled entry (forcing re-tune)")
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, f"{key}.json")
@@ -166,6 +172,16 @@ class PlanCache:
         if doc.get("version") != CACHE_VERSION:
             self._misses.inc()
             return None          # stale format: version bumps are benign
+        if doc.get("stale"):
+            # Drift feedback marked this entry suspect: drop it so this
+            # lookup (and only this one) re-tunes and re-writes fresh.
+            try:
+                os.unlink(path)
+            except OSError:
+                pass             # concurrent re-tune already replaced it
+            self._stale_misses.inc()
+            self._misses.inc()
+            return None
         cfg = doc.get("config")
         if not isinstance(cfg, dict) \
                 or doc.get("checksum") != config_checksum(cfg):
@@ -208,6 +224,38 @@ class PlanCache:
         self._evict()
         return self._path(key)
 
+    def mark_stale(self, key: str) -> bool:
+        """Mark an entry stale (drift feedback from
+        :func:`repro.obs.calibrate.apply_drift`): the next :meth:`get`
+        drops it and reports a miss, so the next ``tune="search"``
+        construction re-times the candidate grid instead of trusting a
+        config the ledger says no longer predicts reality. Atomic
+        rewrite; returns False when the entry doesn't exist or can't be
+        parsed (nothing to stale)."""
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return False
+        if doc.get("stale"):
+            return True          # already marked
+        doc["stale"] = True
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1)
+                f.write("\n")
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._stale_marked.inc()
+        return True
+
     def size(self) -> int:
         """Number of resident entries (quarantined files excluded)."""
         try:
@@ -231,6 +279,8 @@ class PlanCache:
             "quarantined_by_reason": dict(self.quarantined_by_reason),
             "quarantined_bytes": self._quarantined_bytes.value,
             "quarantine_dir_files": in_quarantine,
+            "stale_marked": self._stale_marked.value,
+            "stale_misses": self._stale_misses.value,
         }
 
     def _evict(self) -> None:

@@ -22,6 +22,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.obs.ledger import get_ledger, record_apply
 from repro.obs.trace import get_tracer
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import (
@@ -167,6 +168,10 @@ def search_spmm(a: SparseCSR, *, n: int = 128, backend: str = "xla",
             timings[i] = timer(lambda: op(b, backend=backend))
             sp.event("candidate", index=i, threshold=cand.threshold,
                      seconds=timings[i])
+            if get_ledger() is not None:
+                record_apply(op, "spmm", width=n, dtype="float32",
+                             backend=backend, wall_s=timings[i],
+                             source="search")
             if timings[i] < timings[best_i]:
                 best_i = i
         sp.set(best=best_i, best_seconds=timings[best_i])
@@ -197,6 +202,10 @@ def search_sddmm(a: SparseCSR, *, kf: int = 128, backend: str = "xla",
             timings[i] = timer(lambda: op(x, y, backend=backend))
             sp.event("candidate", index=i, threshold=cand.threshold,
                      seconds=timings[i])
+            if get_ledger() is not None:
+                record_apply(op, "sddmm", width=kf, dtype="float32",
+                             backend=backend, wall_s=timings[i],
+                             source="search")
             if timings[i] < timings[best_i]:
                 best_i = i
         sp.set(best=best_i, best_seconds=timings[best_i])

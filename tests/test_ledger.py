@@ -1,0 +1,476 @@
+"""Perf ledger, calibration, drift-triggered re-tune, and the scrape
+endpoint: storage round-trip + concurrency, operator/search/engine
+recording, calibration golden math, the full drift → stale → re-tune
+feedback cycle, and the HTTP smoke test."""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.obs.calibrate import (
+    apply_drift,
+    calibration_report,
+    detect_drift,
+    render_calibration,
+)
+from repro.obs.ledger import (
+    PerfLedger,
+    apply_sampler,
+    config_digest,
+    get_ledger,
+    ledger_key,
+    operator_sample,
+    use_ledger,
+)
+from repro.sparse.generate import mixed_csr, power_law_csr
+
+
+def counter_clock(start=0.0):
+    t = [start - 1.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return clock
+
+
+def synth(key, wall, pred, t, **extra):
+    s = {"key": key, "wall_s": wall, "predicted_s": pred, "t": t,
+         "op": "spmm", "backend": "xla", "tc_frac": 0.5, "sig": "s0"}
+    s.update(extra)
+    return s
+
+
+# ------------------------------------------------------------ storage ---
+class TestLedgerStore:
+    def test_record_roundtrip_and_stats(self, tmp_path):
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        led.record({"key": "a", "wall_s": 1.0})
+        led.record({"key": "a", "wall_s": 2.0})
+        led.record({"key": "b", "wall_s": 3.0})
+        assert [s["wall_s"] for s in led.samples("a")] == [1.0, 2.0]
+        assert led.keys() == {"a", "b"}
+        # timestamps stamped from the injected clock, in order
+        assert [s["t"] for s in led.samples()] == [0.0, 1.0, 2.0]
+        st = led.stats()
+        assert st["samples"] == 3 and st["keys"] == 2
+        assert st["corrupt_lines"] == 0 and st["bytes"] > 0
+
+    def test_record_requires_key(self, tmp_path):
+        led = PerfLedger(str(tmp_path))
+        with pytest.raises(ValueError):
+            led.record({"wall_s": 1.0})
+
+    def test_corrupt_lines_skipped_and_counted(self, tmp_path):
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        led.record({"key": "a"})
+        with open(led.path, "a") as f:
+            f.write('{"torn": tru\n')       # crashed-writer torn line
+            f.write('"not a dict"\n')       # parses but wrong shape
+        led.record({"key": "b"})
+        assert led.keys() == {"a", "b"}
+        assert led.stats()["corrupt_lines"] == 2
+        # compaction drops the corrupt lines for good
+        led.compact()
+        assert led.stats()["corrupt_lines"] == 0
+        assert led.keys() == {"a", "b"}
+
+    def test_cap_keeps_newest_per_key(self, tmp_path):
+        led = PerfLedger(str(tmp_path), max_per_key=4,
+                         clock=counter_clock())
+        for i in range(10):
+            led.record({"key": "hot", "i": i})
+        led.record({"key": "cold", "i": 99})
+        dropped = led.compact()
+        assert dropped == 6
+        assert [s["i"] for s in led.samples("hot")] == [6, 7, 8, 9]
+        assert [s["i"] for s in led.samples("cold")] == [99]
+
+    def test_clear(self, tmp_path):
+        led = PerfLedger(str(tmp_path))
+        led.record({"key": "a"})
+        led.clear()
+        assert led.samples() == []
+        led.clear()                         # idempotent on a missing file
+
+    def test_concurrent_writers_interleave_whole_lines(self, tmp_path):
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        n_each = 100
+
+        def writer(tag):
+            mine = PerfLedger(str(tmp_path), clock=counter_clock())
+            for i in range(n_each):
+                mine.record({"key": "shared", "tag": tag, "i": i,
+                             "pad": "x" * 64})
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # every line parsed whole: no torn writes, nothing lost
+        docs = led.samples("shared")
+        assert len(docs) == 2 * n_each
+        assert led.stats()["corrupt_lines"] == 0
+        for tag in (0, 1):
+            seen = [d["i"] for d in docs if d["tag"] == tag]
+            assert seen == list(range(n_each))
+
+    def test_env_root_and_max(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_PERF_LEDGER_DIR", str(tmp_path / "env"))
+        monkeypatch.setenv("REPRO_PERF_LEDGER_MAX", "7")
+        led = PerfLedger()
+        assert led.root == str(tmp_path / "env")
+        assert led.max_per_key == 7
+
+    def test_ledger_key_and_config_digest_stability(self):
+        from repro.tune.model import TuneConfig
+
+        k1 = ledger_key("sig", "spmm", 32, "float32", "xla", "d1")
+        assert k1 == ledger_key("sig", "spmm", 32, "float32", "xla", "d1")
+        assert k1 != ledger_key("sig", "spmm", 64, "float32", "xla", "d1")
+        cfg = TuneConfig()
+        # source is excluded: a cached copy of a searched config is the
+        # same plan
+        assert (config_digest(cfg.replace(source="search"))
+                == config_digest(cfg.replace(source="cache")))
+        assert (config_digest(cfg.replace(threshold=3))
+                != config_digest(cfg))
+
+
+# ---------------------------------------------------------- recording ---
+class TestRecording:
+    def test_operator_apply_records_under_use_ledger(self, tmp_path):
+        from repro.core.spmm import LibraSpMM
+
+        a = power_law_csr(128, 96, 6.0, seed=3)
+        b = np.random.default_rng(0).standard_normal(
+            (96, 16)).astype(np.float32)
+        op = LibraSpMM(a)
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        assert get_ledger() is None
+        op(b)                               # no ledger → nothing recorded
+        assert led.samples() == []
+        with use_ledger(led):
+            op(b)
+            op(b)
+        (s1, s2) = led.samples()
+        assert s1["key"] == s2["key"]
+        assert s1["op"] == "spmm" and s1["source"] == "execute"
+        assert s1["width"] == 16 and s1["backend"] == "xla"
+        assert s1["wall_s"] > 0 and s1["predicted_s"] > 0
+        assert s1["vmem_step_bytes"] > 0 and s1["pipeline_depth"] >= 1
+        assert s1["tc_steps"] >= 0 and s1["vpu_steps"] >= 0
+        assert s1["m"] == 128 and s1["k"] == 96
+        op(b)                               # scope closed → sampling off
+        assert len(led.samples()) == 2
+
+    def test_sddmm_apply_records(self, tmp_path):
+        from repro.core.sddmm import LibraSDDMM
+
+        a = mixed_csr(96, 80, seed=4)
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((96, 8)).astype(np.float32)
+        y = rng.standard_normal((80, 8)).astype(np.float32)
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        with use_ledger(led):
+            LibraSDDMM(a)(x, y)
+        (s,) = led.samples()
+        assert s["op"] == "sddmm" and s["width"] == 8
+        assert s["predicted_s"] > 0
+
+    def test_search_candidates_recorded(self, tmp_path):
+        from repro.tune.search import search_spmm, spmm_candidates
+
+        a = power_law_csr(128, 96, 6.0, seed=3)
+        ncand = len(spmm_candidates(a, n=16, mode="hybrid",
+                                    threshold=None))
+        ticks = iter(range(1, 1000))
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        with use_ledger(led):
+            search_spmm(a, n=16, timer=lambda fn: float(next(ticks)))
+        docs = led.samples()
+        assert len(docs) == ncand
+        assert {d["source"] for d in docs} == {"search"}
+        # candidate timings flow through as the measured wall
+        assert [d["wall_s"] for d in docs] == [float(i + 1)
+                                               for i in range(ncand)]
+
+    def test_apply_sampler_none_without_ledger(self):
+        from repro.core.spmm import LibraSpMM
+
+        a = mixed_csr(64, 64, seed=5)
+        op = LibraSpMM(a)
+        assert apply_sampler(op, "spmm", width=16, dtype="float32",
+                             backend="xla") is None
+
+
+# -------------------------------------------------------- calibration ---
+class TestCalibration:
+    def test_report_golden_math(self):
+        # two keys in one regime: ratios 2 and 8 → geomean 4
+        samples = [
+            synth("k1", wall=2.0, pred=1.0, t=0.0),
+            synth("k2", wall=8.0, pred=1.0, t=1.0),
+            synth("k3", wall=0.5, pred=1.0, t=2.0, op="sddmm",
+                  tc_frac=0.9),
+        ]
+        rep = calibration_report(samples)
+        assert rep["n_samples"] == 3 and rep["n_keys"] == 3
+        spmm = rep["regimes"]["spmm/xla/tc-mid"]
+        assert spmm["n"] == 2
+        assert spmm["geomean_ratio"] == pytest.approx(4.0)
+        # log10(2)≈0.30, log10(8)≈0.90 → buckets <=0.5 and <=1
+        assert spmm["log10_hist"]["<=0.5"] == 1
+        assert spmm["log10_hist"]["<=1"] == 1
+        sd = rep["regimes"]["sddmm/xla/tc-high"]
+        assert sd["geomean_ratio"] == pytest.approx(0.5)
+        # worst keys ranked by |log ratio|: 8x and 2x (0.5x ties 2x,
+        # k2 strictly first)
+        assert rep["worst_keys"][0]["key"] == "k2"
+        text = render_calibration(rep, title="t")
+        assert "spmm/xla/tc-mid" in text and "geomean" in text
+
+    def test_report_over_ledger_object(self, tmp_path):
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        led.record(synth("k", wall=3.0, pred=1.0, t=None or 0.0))
+        rep = calibration_report(led)
+        assert rep["n_samples"] == 1
+
+    def test_unusable_samples_excluded_from_regimes(self):
+        rep = calibration_report([
+            synth("k", wall=0.0, pred=1.0, t=0.0),      # zero wall
+            {"key": "k2", "t": 1.0},                     # no prediction
+        ])
+        assert rep["n_samples"] == 2
+        assert rep["regimes"] == {} and rep["worst_keys"] == []
+
+
+# -------------------------------------------------------------- drift ---
+class TestDrift:
+    def test_golden_flag_values(self):
+        # baseline half ratio 1.0, recent half ratio 2.0 → drift 2.0
+        samples = ([synth("k", wall=1.0, pred=1.0, t=float(i))
+                    for i in range(4)]
+                   + [synth("k", wall=2.0, pred=1.0, t=float(4 + i))
+                      for i in range(4)])
+        (flag,) = detect_drift(samples, threshold=1.5)
+        assert flag["key"] == "k" and flag["n"] == 8
+        assert flag["baseline_ratio"] == pytest.approx(1.0)
+        assert flag["recent_ratio"] == pytest.approx(2.0)
+        assert flag["drift"] == pytest.approx(2.0)
+        # speed-ups drift too (ratio below 1/threshold)
+        sped = [dict(s, wall_s=s["wall_s"] / 4.0, t=s["t"])
+                if s["t"] >= 4 else s for s in samples]
+        (flag,) = detect_drift(sped, threshold=1.5)
+        assert flag["drift"] == pytest.approx(0.5)
+
+    def test_stable_key_not_flagged(self):
+        samples = [synth("k", wall=123.0, pred=1e-2, t=float(i))
+                   for i in range(12)]     # huge but *constant* bias
+        assert detect_drift(samples) == []
+
+    def test_min_samples_guard(self):
+        samples = ([synth("k", wall=1.0, pred=1.0, t=0.0)]
+                   + [synth("k", wall=9.0, pred=1.0, t=1.0)] * 4)
+        assert detect_drift(samples, min_samples=6) == []
+        assert len(detect_drift(samples, min_samples=5)) == 1
+
+    def test_out_of_order_timestamps_sorted(self):
+        samples = ([synth("k", wall=2.0, pred=1.0, t=float(10 + i))
+                    for i in range(4)]
+                   + [synth("k", wall=1.0, pred=1.0, t=float(i))
+                      for i in range(4)])
+        (flag,) = detect_drift(samples, threshold=1.5)
+        assert flag["drift"] == pytest.approx(2.0)
+
+
+# -------------------------------------- drift → stale → re-tune cycle ---
+class TestDriftRetune:
+    def test_flagged_key_stales_cache_and_retunes(self, tmp_path):
+        from repro.obs.trace import Tracer, use_tracer
+        from repro.serve import GraphRegistry
+        from repro.tune.cache import PlanCache
+
+        a = power_law_csr(128, 96, 6.0, seed=3)
+        b = np.random.default_rng(0).standard_normal(
+            (96, 16)).astype(np.float32)
+        pc = PlanCache(str(tmp_path / "tune"))
+        reg = GraphRegistry(max_graphs=4, tune="search", tune_cache=pc)
+        reg.register(a, name="t/g", ops=("spmm",))
+        op = reg.resolve("t/g").op("spmm").op
+
+        # record a drifting history through the registry-built operator
+        # (its tune_key is exactly the PlanCache key registration uses)
+        led = PerfLedger(str(tmp_path / "led"), clock=counter_clock())
+        with use_ledger(led):
+            for i in range(8):
+                op(b)
+        docs = led.samples()
+        assert len(docs) == 8 and docs[0].get("tune_key")
+        drifted = [dict(d, wall_s=d["wall_s"] * (40.0 if i >= 4 else 1.0))
+                   for i, d in enumerate(docs)]
+
+        flags = detect_drift(drifted, threshold=1.5)
+        assert len(flags) == 1
+        assert flags[0]["tune_key"] == docs[0]["tune_key"]
+        out = apply_drift(flags, pc, registry=reg)
+        assert out == {"flagged": 1, "staled": 1, "invalidated": 1}
+        assert pc.stats()["stale_marked"] == 1
+        assert "t/g" not in reg.stats()["names"]
+
+        # re-registration misses the staled entry and runs a fresh
+        # search — the tune.search span is the proof of a real re-tune
+        tr = Tracer()
+        with use_tracer(tr):
+            reg.register(a, name="t/g", ops=("spmm",))
+        names = []
+
+        def walk(spans):
+            for s in spans:
+                names.append(s.name)
+                walk(s.children)
+
+        walk(tr.roots)
+        assert "tune.search" in names
+        assert pc.stats()["stale_misses"] == 1
+        # the re-tuned entry is live again: a third registration is a
+        # pure cache hit (no fresh search span)
+        reg2 = GraphRegistry(max_graphs=4, tune="search", tune_cache=pc)
+        tr2 = Tracer()
+        with use_tracer(tr2):
+            reg2.register(a, name="t/g2", ops=("spmm",))
+        names.clear()
+        walk(tr2.roots)
+        assert "tune.search" not in names
+
+    def test_apply_drift_without_registry(self, tmp_path):
+        from repro.tune.cache import PlanCache
+
+        pc = PlanCache(str(tmp_path))
+        out = apply_drift([{"key": "k", "sig": "s", "tune_key": "zz"}],
+                          pc)
+        # unknown tune_key: nothing staled, never raises
+        assert out == {"flagged": 1, "staled": 0, "invalidated": 0}
+
+
+# ---------------------------------------------------- engine sampling ---
+class TestEngineSampling:
+    def _mix(self, engine, mats, width=16, rounds=1):
+        rng = np.random.default_rng(0)
+        for _ in range(rounds):
+            for name, a in mats.items():
+                engine.submit(name, "spmm", b=rng.standard_normal(
+                    (a.k, width)).astype(np.float32))
+            engine.flush()
+
+    def test_every_nth_apply_sampled(self, tmp_path):
+        from repro.serve import GraphRegistry, SparseEngine
+
+        a = power_law_csr(128, 96, 6.0, seed=3)
+        reg = GraphRegistry(max_graphs=4, width_buckets=(16,),
+                            panel_buckets=(1, 2))
+        reg.register(a, name="g", ops=("spmm",))
+        led = PerfLedger(str(tmp_path), clock=counter_clock())
+        eng = SparseEngine(reg, ledger=led, sample_every=2)
+        self._mix(eng, {"g": a}, rounds=4)
+        docs = led.samples()
+        assert len(docs) == 2               # every 2nd of 4 applies
+        assert {d["source"] for d in docs} == {"engine"}
+        assert all(d["op"] == "spmm" and d["wall_s"] > 0 for d in docs)
+
+    def test_sampling_off_by_default(self, tmp_path):
+        from repro.serve import GraphRegistry, SparseEngine
+
+        a = mixed_csr(64, 64, seed=5)
+        reg = GraphRegistry(max_graphs=4, width_buckets=(16,),
+                            panel_buckets=(1, 2))
+        reg.register(a, name="g", ops=("spmm",))
+        led = PerfLedger(str(tmp_path))
+        eng = SparseEngine(reg)             # no ledger wired
+        self._mix(eng, {"g": a}, rounds=2)
+        assert led.samples() == []
+
+    def test_sampled_results_bit_identical(self, tmp_path):
+        from repro.serve import GraphRegistry, SparseEngine
+
+        a = power_law_csr(128, 96, 6.0, seed=3)
+        rng = np.random.default_rng(0)
+        b = rng.standard_normal((96, 16)).astype(np.float32)
+        reg = GraphRegistry(max_graphs=4, width_buckets=(16,),
+                            panel_buckets=(1, 2))
+        reg.register(a, name="g", ops=("spmm",))
+        led = PerfLedger(str(tmp_path))
+        eng = SparseEngine(reg, ledger=led, sample_every=1)
+        rid = eng.submit("g", "spmm", b=b)
+        out = eng.flush()[rid]
+        direct = reg.resolve("g").op("spmm").op(b)
+        assert np.array_equal(np.asarray(out), np.asarray(direct))
+        assert len(led.samples()) >= 1
+
+
+# ------------------------------------------------------ HTTP endpoint ---
+class TestServeHTTP:
+    def test_scrape_health_explain(self):
+        from repro.serve import GraphRegistry, SparseEngine
+
+        a = power_law_csr(128, 96, 6.0, seed=3)
+        reg = GraphRegistry(max_graphs=4, width_buckets=(16,),
+                            panel_buckets=(1, 2))
+        reg.register(a, name="t/g", ops=("spmm",))
+        eng = SparseEngine(reg)
+        b = np.random.default_rng(0).standard_normal(
+            (96, 16)).astype(np.float32)
+        rid = eng.submit("t/g", "spmm", b=b)
+        eng.flush()
+
+        with eng.serve_http() as srv:
+            # /metrics: valid exposition carrying the serve counters
+            body = urllib.request.urlopen(
+                f"{srv.url}/metrics", timeout=10).read().decode()
+            series = {}
+            for line in body.splitlines():
+                if line and not line.startswith("#"):
+                    name, _, val = line.rpartition(" ")
+                    series[name] = float(val)
+            assert series["serve_submitted_total"] == 1.0
+            assert series["serve_served_total"] == 1.0
+            assert "registry_registered_total" in series
+
+            # /health: the engine's health dict as JSON
+            h = json.loads(urllib.request.urlopen(
+                f"{srv.url}/health", timeout=10).read().decode())
+            assert "breakers" in h and "failures" in h
+
+            # /explain/<graph> (slash in the name): full explain entry
+            doc = json.loads(urllib.request.urlopen(
+                f"{srv.url}/explain/t/g", timeout=10).read().decode())
+            assert doc["kind"] == "spmm"
+            assert 0.0 <= doc["tc_fraction"] <= 1.0
+            assert doc["registry"]["name"] == "t/g"
+
+            # unknown routes/graphs are 404s, server stays up
+            for path in ("/explain/nope", "/bogus"):
+                with pytest.raises(urllib.error.HTTPError) as ei:
+                    urllib.request.urlopen(f"{srv.url}{path}",
+                                           timeout=10)
+                assert ei.value.code == 404
+        assert rid == 0
+
+    def test_port_zero_binds_ephemeral(self):
+        from repro.obs.serve_http import ObsHTTPServer
+        from repro.serve import GraphRegistry, SparseEngine
+
+        reg = GraphRegistry(max_graphs=2)
+        eng = SparseEngine(reg)
+        srv = ObsHTTPServer(eng).start()
+        try:
+            assert srv.port > 0
+            assert str(srv.port) in srv.url
+        finally:
+            srv.stop()

@@ -417,3 +417,145 @@ def test_disabled_span_overhead_is_small():
     t_ins = min(_t.repeat(instrumented, number=20000, repeat=3))
     t_bare = min(_t.repeat(bare, number=20000, repeat=3))
     assert t_ins < t_bare * 50 + 0.05   # generous CI headroom
+
+
+# ---------------------------------------------------- histogram timing ---
+class TestHistogramTime:
+    def test_time_observes_elapsed(self):
+        m = MetricsRegistry()
+        h = m.histogram("op_s", buckets=(1e9,))
+        with h.time() as timing:
+            pass
+        assert timing.elapsed >= 0.0
+        (series,) = m.snapshot()["op_s"]["series"]
+        assert series["count"] == 1
+        assert series["sum"] == pytest.approx(timing.elapsed)
+
+    def test_time_with_labels(self):
+        m = MetricsRegistry()
+        h = m.histogram("op_s", labels=("kind",), buckets=(1e9,))
+        with h.time(kind="flush"):
+            pass
+        snap = m.snapshot()["op_s"]["series"]
+        assert [s["labels"] for s in snap] == [{"kind": "flush"}]
+
+    def test_time_validates_labels_eagerly(self):
+        m = MetricsRegistry()
+        h = m.histogram("op_s", labels=("kind",))
+        with pytest.raises(ValueError):
+            h.time(wrong="x")           # before the block runs
+
+    def test_time_records_on_exception(self):
+        m = MetricsRegistry()
+        h = m.histogram("op_s", buckets=(1e9,))
+        with pytest.raises(RuntimeError):
+            with h.time():
+                raise RuntimeError("boom")
+        (series,) = m.snapshot()["op_s"]["series"]
+        assert series["count"] == 1
+
+    def test_engine_flush_uses_histogram(self):
+        from repro.serve import GraphRegistry, SparseEngine
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(64, 48, avg_row=5.0, seed=1)
+        reg = GraphRegistry(width_buckets=(16,), panel_buckets=(1, 4))
+        reg.register(a, name="g", ops=("spmm",))
+        eng = SparseEngine(reg)
+        rng = np.random.default_rng(0)
+        eng.submit("g", "spmm",
+                   b=rng.standard_normal((48, 16)).astype(np.float32))
+        eng.flush()
+        snap = eng.metrics.snapshot()["serve_flush_seconds"]["series"]
+        assert snap[0]["count"] == 1 and snap[0]["sum"] > 0
+        # stats()' requests_per_s view still fed from the same wall
+        assert eng.stats()["requests_per_s"] > 0
+
+
+# ---------------------------------------------- null metrics registry ---
+class TestNullMetricsRegistry:
+    def test_discards_writes_but_keeps_api(self):
+        from repro.obs.metrics import NullMetricsRegistry
+
+        m = NullMetricsRegistry()
+        c = m.counter("a_total", "help")
+        c.inc(5)
+        assert c.value == 0
+        g = m.gauge("g")
+        g.set(3)
+        g.inc()
+        assert g.get() == 0
+        h = m.histogram("h_s", buckets=(1.0,))
+        h.observe(0.5)
+        with h.time() as timing:
+            pass
+        assert timing.elapsed >= 0.0     # timer still measures
+        assert m.snapshot()["h_s"]["series"] == []   # ...nothing lands
+
+    def test_engine_runs_on_null_registry(self):
+        from repro.obs.metrics import NullMetricsRegistry
+        from repro.serve import GraphRegistry, SparseEngine
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(64, 48, avg_row=5.0, seed=1)
+        reg = GraphRegistry(width_buckets=(16,), panel_buckets=(1, 4))
+        reg.register(a, name="g", ops=("spmm",))
+        eng = SparseEngine(reg, metrics=NullMetricsRegistry())
+        rng = np.random.default_rng(0)
+        rid = eng.submit(
+            "g", "spmm",
+            b=rng.standard_normal((48, 16)).astype(np.float32))
+        out = eng.flush()
+        assert rid in out
+        assert "serve_submitted_total 0" in eng.metrics.exposition()
+
+
+# --------------------------------------------------------- flow events ---
+class TestFlowEvents:
+    def test_request_lifecycle_linked_by_flow(self):
+        from repro.serve import GraphRegistry, SparseEngine
+        from repro.sparse.generate import power_law_csr
+
+        a = power_law_csr(64, 48, avg_row=5.0, seed=1)
+        reg = GraphRegistry(width_buckets=(16,), panel_buckets=(1, 4))
+        reg.register(a, name="g", ops=("spmm",))
+        tr = Tracer()
+        eng = SparseEngine(reg, tracer=tr)
+        rng = np.random.default_rng(0)
+        rids = [eng.submit(
+            "g", "spmm",
+            b=rng.standard_normal((48, 16)).astype(np.float32))
+            for _ in range(2)]
+        eng.flush()
+        doc = json.loads(json.dumps(tr.to_chrome_trace()))
+        evs = doc["traceEvents"]
+        for rid in rids:
+            chain = [e for e in evs if e.get("cat") == "repro.flow"
+                     and e["name"] == f"rid{rid}"]
+            chain.sort(key=lambda e: e["ts"])
+            # admit → execute → complete: start, step, finish
+            assert [e["ph"] for e in chain] == ["s", "t", "f"]
+            assert chain[-1]["bp"] == "e"
+            assert len({e["id"] for e in chain}) == 1
+        # distinct rids get distinct flow ids
+        ids = {e["id"] for e in evs if e.get("cat") == "repro.flow"}
+        assert len(ids) == len(rids)
+        # reserved flow attrs never leak into exported args
+        for e in evs:
+            args = e.get("args", {})
+            assert "flow_id" not in args and "flow_ids" not in args
+
+    def test_spans_without_flow_attrs_emit_no_flow_events(self):
+        tr = Tracer(clock=fake_clock())
+        with tr.span("a"):
+            pass
+        evs = tr.to_chrome_trace()["traceEvents"]
+        assert all(e.get("cat") != "repro.flow" for e in evs)
+
+    def test_single_point_flow_dropped(self):
+        tr = Tracer(clock=fake_clock())
+        with tr.span("a", flow_id="only-once"):
+            pass
+        evs = tr.to_chrome_trace()["traceEvents"]
+        # a flow needs ≥2 points to mean anything; singletons vanish
+        assert all(e.get("cat") != "repro.flow" for e in evs)
