@@ -23,12 +23,38 @@ via deterministic segment reduction instead of atomicAdd).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Mapping
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 WINDOW = 8  # paper: 8×1 non-zero column vectors (swap-and-transpose granularity)
+
+#: The three device-byte attribution views of a plan (see
+#: :func:`view_of_key` / :class:`PlanArrays`): the compact
+#: per-block/per-tile tensors, the §4.3 segment launch tables, and the
+#: revaluation position maps.
+PLAN_VIEWS = ("compact", "segment", "revalue")
+
+# SpMM revaluation maps: canonical-nnz position tensors read only by
+# ref.revalue_spmm_arrays. (SDDMM's *_out_pos keys are structural
+# scatter maps every apply needs — they stay in compact/segment.)
+_REVALUE_KEYS = frozenset(
+    {"tc_pos", "vpu_pos", "tc_seg_pos", "vpu_seg_pos"})
+
+# vals tensor → the pos map that rebuilds it (ref.revalue_spmm_arrays).
+_REVALUE_OF = {"tc_vals": "tc_pos", "vpu_vals": "vpu_pos",
+               "tc_seg_vals": "tc_seg_pos", "vpu_seg_vals": "vpu_seg_pos"}
+
+
+def view_of_key(key: str) -> str:
+    """Classify one device-array key into a :data:`PLAN_VIEWS` view."""
+    if key in _REVALUE_KEYS:
+        return "revalue"
+    if "_seg_" in key:
+        return "segment"
+    return "compact"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,16 +303,11 @@ def _sddmm_segment_arrays(plan: "SDDMMPlan") -> dict[str, np.ndarray]:
     return out
 
 
-def device_arrays(plan) -> dict[str, jnp.ndarray]:
-    """Upload a plan's arrays once; reused across iterations (paper §4.1 ③).
-
-    Besides the compact per-block/per-tile tensors (the XLA reference
-    path and the revaluation maps), plans carrying §4.3 segment tables
-    also upload the segment-granular launch view the Pallas kernels
-    iterate over (``*_seg_*`` keys — see :func:`_spmm_segment_arrays` /
-    :func:`_sddmm_segment_arrays`).
-    """
-    out = {}
+def _host_arrays(plan) -> dict[str, np.ndarray]:
+    """Every device-uploadable array of one plan, host-side, in its
+    exact device dtype (so ``nbytes`` matches ``jax.Array.nbytes`` and
+    a byte budget can be priced without uploading)."""
+    out: dict[str, np.ndarray] = {}
     if isinstance(plan, SpMMPlan):
         # tc_active_row: flat output-row index of every compacted TC row —
         # the scatter map of the fused combine epilogue (rank r owns rows
@@ -296,32 +317,249 @@ def device_arrays(plan) -> dict[str, jnp.ndarray]:
             + np.arange(WINDOW, dtype=np.int64)[None, :]
         ).reshape(-1)
         out.update(
-            tc_vals=jnp.asarray(plan.tc.vals),
-            tc_cols=jnp.asarray(plan.tc.cols),
-            tc_bitmap=jnp.asarray(plan.tc.bitmap),
-            tc_rank=jnp.asarray(plan.tc.rank),
-            tc_active_row=jnp.asarray(active_rows, jnp.int32),
-            tc_pos=jnp.asarray(plan.tc.pos),
-            vpu_vals=jnp.asarray(plan.vpu.vals),
-            vpu_cols=jnp.asarray(plan.vpu.cols),
-            vpu_row=jnp.asarray(plan.vpu.row),
-            vpu_pos=jnp.asarray(plan.vpu.pos),
+            tc_vals=np.asarray(plan.tc.vals, np.float32),
+            tc_cols=np.asarray(plan.tc.cols, np.int32),
+            tc_bitmap=np.asarray(plan.tc.bitmap, np.uint32),
+            tc_rank=np.asarray(plan.tc.rank, np.int32),
+            tc_active_row=np.asarray(active_rows, np.int32),
+            vpu_vals=np.asarray(plan.vpu.vals, np.float32),
+            vpu_cols=np.asarray(plan.vpu.cols, np.int32),
+            vpu_row=np.asarray(plan.vpu.row, np.int32),
         )
-        out.update({k: jnp.asarray(v)
-                    for k, v in _spmm_segment_arrays(plan).items()})
+        if plan.tc.pos is not None:
+            out["tc_pos"] = np.asarray(plan.tc.pos, np.int32)
+        if plan.vpu.pos is not None:
+            out["vpu_pos"] = np.asarray(plan.vpu.pos, np.int32)
+        for k, v in _spmm_segment_arrays(plan).items():
+            out[k] = np.asarray(v)
     elif isinstance(plan, SDDMMPlan):
         out.update(
-            tc_cols=jnp.asarray(plan.tc.cols),
-            tc_bitmap=jnp.asarray(plan.tc.bitmap),
-            tc_window=jnp.asarray(plan.tc.window),
-            tc_out_pos=jnp.asarray(plan.tc_out_pos),
-            vpu_rows=jnp.asarray(plan.vpu.rows),
-            vpu_cols=jnp.asarray(plan.vpu.cols),
-            vpu_out_pos=jnp.asarray(plan.vpu.out_pos),
-            vpu_mask=jnp.asarray(plan.vpu.mask),
+            tc_cols=np.asarray(plan.tc.cols, np.int32),
+            tc_bitmap=np.asarray(plan.tc.bitmap, np.uint32),
+            tc_window=np.asarray(plan.tc.window, np.int32),
+            tc_out_pos=np.asarray(plan.tc_out_pos, np.int32),
+            vpu_rows=np.asarray(plan.vpu.rows, np.int32),
+            vpu_cols=np.asarray(plan.vpu.cols, np.int32),
+            vpu_out_pos=np.asarray(plan.vpu.out_pos, np.int32),
+            vpu_mask=np.asarray(plan.vpu.mask, np.bool_),
         )
-        out.update({k: jnp.asarray(v)
-                    for k, v in _sddmm_segment_arrays(plan).items()})
+        for k, v in _sddmm_segment_arrays(plan).items():
+            out[k] = np.asarray(v)
     else:  # pragma: no cover
         raise TypeError(type(plan))
     return out
+
+
+# Compact key sets per stream (SpMM / SDDMM) and their §4.3 segment
+# replacements — the ingredients of PlanArrays.backend_keys.
+_SPMM_TC = ("tc_vals", "tc_cols", "tc_rank", "tc_active_row")
+_SPMM_TC_SEG = ("tc_seg_vals", "tc_seg_cols", "tc_seg_rank", "tc_seg_row")
+_SPMM_VPU = ("vpu_vals", "vpu_cols", "vpu_row")
+_SPMM_VPU_SEG = ("vpu_seg_vals", "vpu_seg_cols", "vpu_seg_row")
+_SDDMM_TC = ("tc_cols", "tc_bitmap", "tc_window", "tc_out_pos")
+_SDDMM_TC_SEG = ("tc_seg_cols", "tc_seg_bitmap", "tc_seg_window",
+                 "tc_seg_out_pos")
+_SDDMM_VPU = ("vpu_rows", "vpu_cols", "vpu_out_pos", "vpu_mask")
+_SDDMM_VPU_SEG = ("vpu_seg_rows", "vpu_seg_cols", "vpu_seg_out_pos",
+                  "vpu_seg_mask")
+
+
+class PlanArrays(Mapping):
+    """Lazy, byte-accounted device views of one plan (paper §4.1 ③,
+    made backend-aware).
+
+    The eager ``device_arrays`` dict uploaded *both* the compact
+    per-block/per-tile view and the §4.3 segment launch view — ~2× the
+    plan bytes a given backend ever reads. ``PlanArrays`` keeps the
+    plan host-side and uploads each array on first use:
+
+    * :meth:`for_backend` returns the exact key set one backend's apply
+      reads (``xla`` → compact only — ``tc_bitmap`` is SpMM-dead on
+      both backends and never uploads; ``pallas`` → segment tables for
+      segmented streams, compact fallback otherwise; ``revalue=True``
+      swaps value tensors for their position maps, which
+      :func:`repro.kernels.ref.revalue_spmm_arrays` rebuilds in-trace),
+      so a pallas-serving registry holds only the segment view and an
+      xla one only the compact view. Outputs are bit-identical: the
+      dropped keys are exactly the ones the selected apply never reads.
+    * Every upload is recorded (key, view, ``nbytes``, dtype); an
+      *accountant* callback (:meth:`set_accountant` — usually a
+      :class:`repro.obs.memstat.MemLedger` binder) receives each record,
+      with already-resident uploads replayed on attach.
+    * The object is a ``Mapping`` **and** a registered jax pytree whose
+      flatten materializes every key — legacy call sites that pass
+      ``op.arrays`` straight into a jit (tests, benches, the GNN VJP)
+      keep working, eager-equivalently.
+    """
+
+    def __init__(self, plan):
+        self.plan = plan
+        self.kind = "spmm" if isinstance(plan, SpMMPlan) else "sddmm"
+        self._host = _host_arrays(plan)
+        self._views = {k: view_of_key(k) for k in self._host}
+        self._dev: dict[str, jnp.ndarray] = {}
+        self._uploads: dict[str, tuple[str, int, str]] = {}
+        self._bcache: dict[tuple, dict] = {}
+        self._accountant = None
+
+    # ------------------------------------------------------- mapping ---
+    def __getitem__(self, key: str) -> jnp.ndarray:
+        arr = self._dev.get(key)
+        if arr is None:
+            # First touch may happen inside a jit trace (legacy call
+            # sites flatten op.arrays under tracing); force an eager
+            # upload so the cached value is a concrete jax.Array, not
+            # a tracer.
+            with jax.ensure_compile_time_eval():
+                arr = self._dev[key] = jnp.asarray(self._host[key])
+            view = self._views[key]
+            rec = (view, int(arr.nbytes), str(arr.dtype))
+            self._uploads[key] = rec
+            if self._accountant is not None:
+                self._accountant(view, key, rec[1], rec[2])
+        return arr
+
+    def __iter__(self):
+        return iter(self._host)
+
+    def __len__(self) -> int:
+        return len(self._host)
+
+    def __contains__(self, key) -> bool:
+        return key in self._host
+
+    # ------------------------------------------------- backend views ---
+    @property
+    def segmented(self) -> bool:
+        """True when the plan carries §4.3 segment launch tables."""
+        return any(self._views[k] == "segment" for k in self._host)
+
+    def backend_keys(self, backend: str, *, revalue: bool = False,
+                     segmented: bool = True) -> tuple[str, ...]:
+        """The exact key set ``backend``'s apply reads for this plan."""
+        ks = self._host
+        if self.kind == "spmm":
+            if backend == "xla" or not segmented:
+                keys = list(_SPMM_TC + _SPMM_VPU)
+            else:
+                keys = list(_SPMM_TC_SEG if "tc_seg_vals" in ks
+                            else _SPMM_TC)
+                keys += list(_SPMM_VPU_SEG if "vpu_seg_vals" in ks
+                             else _SPMM_VPU)
+            if revalue:
+                # Swap each value tensor for its position map — the
+                # revaluation path rebuilds values in-trace, so the
+                # baked-in ones never upload.
+                swapped = []
+                for k in keys:
+                    pos = _REVALUE_OF.get(k)
+                    swapped.append(pos if pos is not None and pos in ks
+                                   else k)
+                keys = swapped
+            return tuple(keys)
+        if backend == "xla" or not segmented:
+            return _SDDMM_TC + _SDDMM_VPU
+        keys = list(_SDDMM_TC_SEG if "tc_seg_cols" in ks else _SDDMM_TC)
+        keys += list(_SDDMM_VPU_SEG if "vpu_seg_rows" in ks
+                     else _SDDMM_VPU)
+        return tuple(keys)
+
+    def for_backend(self, backend: str, *, revalue: bool = False,
+                    segmented: bool = True) -> dict[str, jnp.ndarray]:
+        """Materialize (upload on first use) and return the minimal
+        device dict for one backend; memoized per (backend, revalue,
+        segmented)."""
+        ck = (backend, revalue, segmented)
+        cached = self._bcache.get(ck)
+        if cached is None:
+            cached = self._bcache[ck] = {
+                k: self[k]
+                for k in self.backend_keys(backend, revalue=revalue,
+                                           segmented=segmented)}
+        return cached
+
+    def materialize_all(self) -> dict[str, jnp.ndarray]:
+        """Upload every view (the old eager behaviour) and return the
+        full device dict."""
+        return {k: self[k] for k in self._host}
+
+    # ---------------------------------------------------- accounting ---
+    def set_accountant(self, accountant) -> None:
+        """Attach a ``(view, key, nbytes, dtype) -> None`` upload
+        recorder; uploads that already happened (e.g. during tune
+        search) are replayed into it immediately."""
+        self._accountant = accountant
+        if accountant is not None:
+            for key, (view, nbytes, dtype) in self._uploads.items():
+                accountant(view, key, nbytes, dtype)
+
+    def resident_items(self) -> list[tuple[str, jnp.ndarray]]:
+        """The device arrays currently uploaded (ledger ground truth)."""
+        return sorted(self._dev.items())
+
+    def resident_nbytes(self, view: str | None = None) -> int:
+        """Exact bytes resident on device (sum of uploaded
+        ``jax.Array.nbytes``), optionally for one view."""
+        return sum(nb for v, nb, _ in self._uploads.values()
+                   if view is None or v == view)
+
+    def view_nbytes(self) -> dict[str, int]:
+        """Resident bytes per view (zero-filled over all views)."""
+        out = {v: 0 for v in PLAN_VIEWS}
+        for v, nb, _ in self._uploads.values():
+            out[v] += nb
+        return out
+
+    def projected_nbytes(self, backend: str | None = None, *,
+                         revalue: bool = False,
+                         segmented: bool = True) -> int:
+        """Bytes this plan *would* hold resident once served: the
+        backend key set's host ``nbytes`` (device dtypes match host —
+        see :func:`_host_arrays`), or all keys when ``backend`` is
+        None. No upload happens."""
+        keys = (self._host if backend is None
+                else self.backend_keys(backend, revalue=revalue,
+                                       segmented=segmented))
+        return sum(int(self._host[k].nbytes) for k in keys)
+
+    def memory(self) -> dict:
+        """Per-view resident/lazy breakdown for explain reports."""
+        views: dict[str, dict] = {
+            v: {"keys": 0, "resident_keys": 0, "bytes": 0,
+                "resident_bytes": 0} for v in PLAN_VIEWS}
+        for k, host in self._host.items():
+            st = views[self._views[k]]
+            st["keys"] += 1
+            st["bytes"] += int(host.nbytes)
+            rec = self._uploads.get(k)
+            if rec is not None:
+                st["resident_keys"] += 1
+                st["resident_bytes"] += rec[1]
+        return {
+            "views": {v: st for v, st in views.items() if st["keys"]},
+            "resident_bytes": self.resident_nbytes(),
+            "total_bytes": sum(int(h.nbytes) for h in self._host.values()),
+        }
+
+
+def _plan_arrays_flatten(pa: PlanArrays):
+    keys = tuple(sorted(pa._host))
+    return tuple(pa[k] for k in keys), keys
+
+
+def _plan_arrays_unflatten(keys, leaves) -> dict:
+    # Reconstructing the lazy wrapper under tracing makes no sense —
+    # flattened PlanArrays round-trip as the eager-equivalent dict.
+    return dict(zip(keys, leaves))
+
+
+jax.tree_util.register_pytree_node(
+    PlanArrays, _plan_arrays_flatten, _plan_arrays_unflatten)
+
+
+def device_arrays(plan) -> PlanArrays:
+    """Backend-aware lazy device views of a plan; arrays upload on
+    first use and register their bytes (paper §4.1 ③ — upload once,
+    reuse across iterations; see :class:`PlanArrays`). Indexing or
+    flattening the result reproduces the old eager dict exactly."""
+    return PlanArrays(plan)

@@ -77,16 +77,18 @@ class LibraSDDMM:
     def __call__(self, x: jnp.ndarray, y: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
         assert x.shape[0] >= self.m and y.shape[0] >= self.k
+        # Backend-aware lazy view: see LibraSpMM.__call__.
+        arrs = self.arrays.for_backend(backend)
         fn = cached_compile(
             self._apply_cache,
             (x.shape[1], str(x.dtype), backend, interpret,
              x.shape[0], y.shape[0]),
-            lambda: sddmm_apply.lower(self.arrays, x, y, nnz=self.nnz,
+            lambda: sddmm_apply.lower(arrs, x, y, nnz=self.nnz,
                                       backend=backend, cfg=self.tune_config,
                                       interpret=interpret),
             sample=apply_sampler(self, "sddmm", width=x.shape[1],
                                  dtype=str(x.dtype), backend=backend))
-        return fn(self.arrays, x, y)
+        return fn(arrs, x, y)
 
     @property
     def tc_ratio(self) -> float:

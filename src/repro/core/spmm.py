@@ -100,16 +100,20 @@ class LibraSpMM:
     def __call__(self, b: jnp.ndarray, backend: str = "xla",
                  interpret: bool = True) -> jnp.ndarray:
         assert b.shape[0] == self.k, (b.shape, self.k)
+        # Only the key set this backend's apply reads is uploaded —
+        # an xla operator never materializes the §4.3 segment tables
+        # and a pallas one never the compact fallback.
+        arrs = self.arrays.for_backend(backend)
         fn = cached_compile(
             self._apply_cache,
             (b.shape[1], str(b.dtype), backend, interpret),
-            lambda: spmm_apply.lower(self.arrays, b, m=self.m,
+            lambda: spmm_apply.lower(arrs, b, m=self.m,
                                      nwin=self.nwin, backend=backend,
                                      cfg=self.tune_config,
                                      interpret=interpret),
             sample=apply_sampler(self, "spmm", width=b.shape[1],
                                  dtype=str(b.dtype), backend=backend))
-        return fn(self.arrays, b)
+        return fn(arrs, b)
 
     @property
     def tc_ratio(self) -> float:

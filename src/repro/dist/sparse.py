@@ -179,7 +179,10 @@ class BatchedSpMM:
                                     interpret=interpret,
                                     edge_vals=ev[0] if ev else None)
 
-        args = (op.arrays, b_stack) + ((edge_vals,) if has_ev else ())
+        # Lazy backend view; with edge_vals the revalue maps replace
+        # the baked-in value tensors (rebuilt in-trace per panel).
+        arrs = op.arrays.for_backend(backend, revalue=has_ev)
+        args = (arrs, b_stack) + ((edge_vals,) if has_ev else ())
         fn = cached_compile(
             self._cache,
             (b_stack.shape, str(b_stack.dtype), backend, interpret, has_ev),
@@ -206,12 +209,13 @@ class BatchedSDDMM:
                                      backend=backend, cfg=op.tune_config,
                                      interpret=interpret)
 
+        arrs = op.arrays.for_backend(backend)
         fn = cached_compile(
             self._cache,
             (x_stack.shape, y_stack.shape, str(x_stack.dtype), backend,
              interpret),
-            lambda: jax.jit(batched).lower(op.arrays, x_stack, y_stack))
-        return fn(op.arrays, x_stack, y_stack)
+            lambda: jax.jit(batched).lower(arrs, x_stack, y_stack))
+        return fn(arrs, x_stack, y_stack)
 
 
 # ----------------------------------------------------------- sharded ops ---

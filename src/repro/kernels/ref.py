@@ -111,8 +111,12 @@ def revalue_spmm_arrays(arrs, edge_vals):
         ).astype(jnp.float32)
 
     out = dict(arrs)
-    out["tc_vals"] = from_pos(arrs["tc_pos"])
-    out["vpu_vals"] = from_pos(arrs["vpu_pos"])
+    # Lazy backend views may omit compact pos maps when only the
+    # segment stream is served (see PlanArrays.for_backend).
+    if "tc_pos" in arrs:
+        out["tc_vals"] = from_pos(arrs["tc_pos"])
+    if "vpu_pos" in arrs:
+        out["vpu_vals"] = from_pos(arrs["vpu_pos"])
     # Segment-granular launch tables (§4.3) carry their own value
     # tensors; their pos maps are −1 on padding, which from_pos zeroes.
     if "tc_seg_pos" in arrs:

@@ -20,8 +20,12 @@ Six pieces (see the module docstrings for depth):
 * :mod:`repro.obs.calibrate` — per-regime model-error reports over the
   ledger, plus the drift detector whose flags stale PlanCache entries
   (the re-tune trigger).
+* :mod:`repro.obs.memstat` — exact device-memory accounting: a
+  :class:`MemLedger` attributing every uploaded plan array to (graph,
+  view, op, dtype) by ``nbytes``, backing the registry byte budget and
+  the :class:`MemoryPressure` admission reject.
 * :mod:`repro.obs.serve_http` — stdlib scrape endpoint (``/metrics``,
-  ``/health``, ``/explain/<graph>``) for a running engine.
+  ``/health``, ``/memory``, ``/explain/<graph>``) for a running engine.
 
 Exports resolve lazily (PEP 562) so ``import repro.obs`` stays cheap
 and free of jax imports until an explain function is actually called.
@@ -59,6 +63,9 @@ _LAZY = {
     "render_calibration": "repro.obs.calibrate",
     "detect_drift": "repro.obs.calibrate",
     "apply_drift": "repro.obs.calibrate",
+    "MemLedger": "repro.obs.memstat",
+    "MemoryPressure": "repro.obs.memstat",
+    "render_memory": "repro.obs.memstat",
     "ObsHTTPServer": "repro.obs.serve_http",
     "serve_obs_http": "repro.obs.serve_http",
 }

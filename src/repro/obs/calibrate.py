@@ -76,6 +76,17 @@ def _tc_bucket(frac: float) -> str:
     return "tc-high"
 
 
+def _bytes_bucket(nbytes: int) -> str:
+    """Footprint regime of a sample's resident plan bytes."""
+    if nbytes < 1 << 20:
+        return "mem-<1mb"
+    if nbytes < 8 << 20:
+        return "mem-1-8mb"
+    if nbytes < 64 << 20:
+        return "mem-8-64mb"
+    return "mem-64mb+"
+
+
 def calibration_report(ledger_or_samples) -> dict:
     """Join measured wall times against model predictions and summarize
     error per feature regime (``op/backend/tc-fraction`` bucket).
@@ -86,6 +97,7 @@ def calibration_report(ledger_or_samples) -> dict:
     samples = _samples_of(ledger_or_samples)
     by_key: dict[str, list[dict]] = {}
     regimes: dict[str, list[float]] = {}
+    footprints: dict[str, list[float]] = {}
     for s in samples:
         by_key.setdefault(s["key"], []).append(s)
         r = _ratios([s])
@@ -93,15 +105,20 @@ def calibration_report(ledger_or_samples) -> dict:
             regime = (f"{s.get('op', '?')}/{s.get('backend', '?')}/"
                       f"{_tc_bucket(float(s.get('tc_frac', 0.0)))}")
             regimes.setdefault(regime, []).extend(r)
+            mem = s.get("mem_bytes")
+            if mem:   # PR 9+: resident plan bytes at sample time
+                fp = (f"{s.get('op', '?')}/"
+                      f"{_bytes_bucket(int(mem.get('total', 0)))}")
+                footprints.setdefault(fp, []).extend(r)
 
-    regime_rows = {}
-    for regime in sorted(regimes):
-        ratios = regimes[regime]
-        regime_rows[regime] = {
-            "n": len(ratios),
-            "geomean_ratio": _geomean(ratios),
-            "log10_hist": _log_hist(ratios),
-        }
+    def _rows(groups):
+        return {g: {"n": len(groups[g]),
+                    "geomean_ratio": _geomean(groups[g]),
+                    "log10_hist": _log_hist(groups[g])}
+                for g in sorted(groups)}
+
+    regime_rows = _rows(regimes)
+    footprint_rows = _rows(footprints)
 
     worst = []
     for key, docs in by_key.items():
@@ -120,6 +137,7 @@ def calibration_report(ledger_or_samples) -> dict:
         "n_samples": len(samples),
         "n_keys": len(by_key),
         "regimes": regime_rows,
+        "footprints": footprint_rows,
         "worst_keys": worst[:8],
     }
 
@@ -140,6 +158,10 @@ def render_calibration(report: dict, *, title: str | None = None) -> str:
         rows.append((f"{regime} log10 hist",
                      " ".join(f"{k}:{v}" for k, v in populated.items())
                      or "(empty)"))
+    # Footprint regimes absent in pre-PR-9 reports.
+    for fp, stats in report.get("footprints", {}).items():
+        rows.append((fp, f"n={stats['n']} geomean meas/pred="
+                         f"{stats['geomean_ratio']:.3g}"))
     for w in report["worst_keys"][:4]:
         rows.append((f"worst {w['key'][:12]}",
                      f"{w['op']} n={w['n']} "

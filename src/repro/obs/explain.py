@@ -198,6 +198,10 @@ def _explain_op(op, kind: str, *, a=None, measure: bool, width: int,
                 backend: str, reps: int, timer=None) -> dict:
     with get_tracer().span("obs.explain", kind=kind):
         report = explain_plan(op.plan, cfg=op.tune_config, a=a, kind=kind)
+        arrays = getattr(op, "arrays", None)
+        if hasattr(arrays, "view_nbytes"):
+            # Per-view resident/lazy device-byte status (PlanArrays).
+            report["memory"] = arrays.memory()
         if measure:
             report["measured"] = _measure(op, kind, width=width,
                                           backend=backend, reps=reps,
@@ -327,6 +331,20 @@ def render_table(report: dict, *, title: str | None = None) -> str:
         rows.append(("pipeline_depth",
                      f"{occ['pipeline_depth']} "
                      f"({'fits' if occ['fits'] else 'OVER BUDGET'})"))
+    mem = report.get("memory")
+    if mem:
+        for view, st in sorted(mem["views"].items()):
+            if st["resident_keys"] == 0:
+                status = "lazy"
+            elif st["resident_keys"] == st["keys"]:
+                status = "resident"
+            else:
+                status = "partial"
+            rows.append((f"mem_{view}",
+                         f"{status} {st['resident_bytes']}/{st['bytes']} B "
+                         f"({st['resident_keys']}/{st['keys']} arrays)"))
+        rows.append(("mem_resident", f"{mem['resident_bytes']}/"
+                                     f"{mem['total_bytes']} B"))
     meas = report.get("measured")
     if meas:
         rows.append(("measured_wall", f"{meas['wall_s'] * 1e6:.1f} us "

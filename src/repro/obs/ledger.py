@@ -359,6 +359,12 @@ class _OpLedgerContext:
             s["tune_key"] = self.tune_key
         s.update(self._model(width))
         s.update(self._hlo(width, dtype, backend))
+        arrays = getattr(self.op, "arrays", None)
+        if hasattr(arrays, "view_nbytes"):
+            # Per-sample, not memoized: residency grows as lazy views
+            # materialize, and calibration buckets error by footprint.
+            vb = arrays.view_nbytes()
+            s["mem_bytes"] = {**vb, "total": sum(vb.values())}
         return s
 
 

@@ -10,6 +10,10 @@ exposing:
   (the common case) emits each series once;
 * ``GET /health`` — ``engine.health()`` as JSON (breakers, degradation,
   failure/deadline accounting);
+* ``GET /memory[?top_k=N]`` — the registry's exact device-byte
+  attribution (:meth:`~repro.serve.registry.GraphRegistry
+  .memory_report`) as JSON; 404 when accounting is disabled
+  (``mem=False``);
 * ``GET /explain/<graph>[?op=spmm|sddmm]`` — the
   :func:`~repro.obs.explain.explain_entry` report as JSON. Graph names
   may contain slashes (``tenantA/social``); unknown graphs are 404,
@@ -139,6 +143,16 @@ class ObsHTTPServer:
             self._send(handler, 200, _EXPOSITION_TYPE, body)
         elif path == "/health":
             self._send_json(handler, 200, self.engine.health())
+        elif path == "/memory":
+            registry = self.engine.registry
+            if getattr(registry, "mem", None) is None:
+                self._send_json(handler, 404,
+                                {"error": "byte accounting disabled"})
+                return
+            query = urllib.parse.parse_qs(parsed.query)
+            top_k = int(query.get("top_k", ["8"])[0])
+            self._send_json(handler, 200,
+                            registry.memory_report(top_k=top_k))
         elif path.startswith("/explain/"):
             name = urllib.parse.unquote(path[len("/explain/"):])
             query = urllib.parse.parse_qs(parsed.query)
@@ -158,7 +172,7 @@ class ObsHTTPServer:
         else:
             self._send_json(handler, 404,
                             {"error": f"unknown path {path!r}",
-                             "routes": ["/metrics", "/health",
+                             "routes": ["/metrics", "/health", "/memory",
                                         "/explain/<graph>"]})
 
 

@@ -25,6 +25,7 @@ _LAZY = {
     "GNNService": "repro.serve.gnn_service",
     "GraphRegistry": "repro.serve.registry",
     "InjectedFault": "repro.serve.faults",
+    "MemoryPressure": "repro.obs.memstat",
     "RegisteredGraph": "repro.serve.registry",
     "Request": "repro.serve.batching",
     "ResiliencePolicy": "repro.serve.resilience",

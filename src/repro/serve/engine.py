@@ -118,13 +118,6 @@ def _pad_width(arr: jnp.ndarray, w: int) -> jnp.ndarray:
     return arr if pad == 0 else jnp.pad(arr, ((0, 0), (0, pad)))
 
 
-def _strip_segments(arrs: dict) -> dict:
-    """The plan's unsegmented view: drop the §4.3 ``*_seg_*`` launch
-    tables so the apply falls back to the per-block/per-tile grid
-    (bit-identical — the segmented launch is verified inert)."""
-    return {k: v for k, v in arrs.items() if "_seg_" not in k}
-
-
 class SparseEngine:
     """Admit → bucket → pack → execute → unpad/scatter, resiliently."""
 
@@ -242,6 +235,25 @@ class SparseEngine:
     def _reject(self, reason: str, detail: str = "") -> None:
         self._rejected.inc(reason=reason)
         raise AdmissionError(reason, detail)
+
+    def register(self, a, **kwargs) -> str:
+        """Register through the engine so byte-budget rejections are
+        engine-typed: a registration whose serving-view plan bytes
+        cannot fit the registry's ``max_bytes`` raises
+        :class:`~repro.obs.memstat.MemoryPressure` and is counted under
+        ``serve_rejected_total{reason="memory_pressure"}``."""
+        from repro.obs.memstat import MemoryPressure
+
+        try:
+            return self.registry.register(a, **kwargs)
+        except MemoryPressure:
+            self._rejected.inc(reason="memory_pressure")
+            raise
+
+    def memory_report(self, top_k: int = 8) -> dict:
+        """Delegates to
+        :meth:`~repro.serve.registry.GraphRegistry.memory_report`."""
+        return self.registry.memory_report(top_k=top_k)
 
     def submit(self, graph: str, op: str, *, b=None, x=None, y=None,
                edge_vals=None, deadline_ms: float | None = None) -> int:
@@ -395,6 +407,9 @@ class SparseEngine:
         self._stats["flushes"].inc()
         self._stats["served"].inc(len(pending))
         self._stats["serve_time_s"].inc(timing.elapsed)
+        # Serving materializes lazy plan views; re-check the byte
+        # budget now that residency may have grown.
+        self.registry.enforce_budget()
         return results
 
     def serve(self, submissions) -> dict[int, jnp.ndarray | ServeError]:
@@ -727,9 +742,13 @@ class SparseEngine:
                 return [("single", single), ("xla", xla)]
             one = fn.op                     # the underlying LibraSpMM
 
-            def arrays(segmented: bool):
-                arrs = (one.arrays if segmented
-                        else _strip_segments(one.arrays))
+            def arrays(backend: str, segmented: bool):
+                # Lazy per-rung view: only the keys this rung's apply
+                # reads materialize (revalue maps instead of baked-in
+                # values when the request carries edge_vals).
+                arrs = one.arrays.for_backend(
+                    backend, segmented=segmented,
+                    revalue=r.edge_vals is not None)
                 return (arrs if r.edge_vals is None
                         else ref.revalue_spmm_arrays(arrs, r.edge_vals))
 
@@ -744,14 +763,14 @@ class SparseEngine:
 
             def unsegmented():
                 cfg = one.tune_config.replace(ts=0, cs=0)
-                return spmm_apply(arrays(False), bp, m=one.m,
+                return spmm_apply(arrays(reg.backend, False), bp, m=one.m,
                                   nwin=one.nwin, backend=reg.backend,
                                   cfg=cfg,
                                   interpret=reg.interpret)[:, :width]
 
             def xla():
-                return spmm_apply(arrays(True), bp, m=one.m, nwin=one.nwin,
-                                  backend="xla",
+                return spmm_apply(arrays("xla", True), bp, m=one.m,
+                                  nwin=one.nwin, backend="xla",
                                   cfg=one.tune_config)[:, :width]
 
             rungs = [("single", single)]
@@ -779,13 +798,15 @@ class SparseEngine:
 
         def sd_unsegmented():
             cfg = one.tune_config.replace(ts=0, cs=0)
-            return sddmm_apply(_strip_segments(one.arrays), xp, yp,
-                               nnz=one.nnz, backend=reg.backend, cfg=cfg,
-                               interpret=reg.interpret)
+            return sddmm_apply(
+                one.arrays.for_backend(reg.backend, segmented=False),
+                xp, yp, nnz=one.nnz, backend=reg.backend, cfg=cfg,
+                interpret=reg.interpret)
 
         def sd_xla():
-            return sddmm_apply(one.arrays, xp, yp, nnz=one.nnz,
-                               backend="xla", cfg=one.tune_config)
+            return sddmm_apply(one.arrays.for_backend("xla"), xp, yp,
+                               nnz=one.nnz, backend="xla",
+                               cfg=one.tune_config)
 
         rungs = [("single", sd_single)]
         if any("_seg_" in k for k in one.arrays):

@@ -22,6 +22,12 @@ amortized state:
   least-recently-*served* entry is evicted (its AOT executables and
   plan arrays are dropped; the persistent tune cache keeps re-tuning
   cheap on re-registration).
+* **byte budget** — an optional ``max_bytes`` cap (env
+  ``REPRO_REGISTRY_MAX_BYTES``) evicts least-recently-served entries
+  by *accounted device bytes* (every lazy plan upload lands in a
+  :class:`repro.obs.memstat.MemLedger`), and rejects registrations
+  whose serving-view footprint exceeds the budget outright with a
+  typed :class:`~repro.obs.memstat.MemoryPressure`.
 * **AOT warmup** — :meth:`warm` compiles one executable per
   (op, feature-width bucket, panel-size bucket, dtype, backend) ahead
   of traffic, so the first request of each bucket shape doesn't pay
@@ -31,11 +37,14 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 from collections import OrderedDict
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import view_of_key
+from repro.obs.memstat import MemLedger, MemoryPressure
 from repro.obs.metrics import MetricsRegistry
 from repro.sparse.matrix import SparseCSR
 from repro.tune.cache import matrix_signature
@@ -100,9 +109,15 @@ class GraphRegistry:
                  panel_buckets=DEFAULT_PANEL_BUCKETS,
                  backend: str = "xla", interpret: bool = True,
                  tune="model", tune_cache=None, faults=None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 max_bytes: int | None = None, mem: bool = True):
         assert max_graphs >= 1
         self.max_graphs = max_graphs
+        if max_bytes is None:
+            env = os.environ.get("REPRO_REGISTRY_MAX_BYTES")
+            max_bytes = int(env) if env else None
+        assert max_bytes is None or max_bytes > 0
+        self.max_bytes = max_bytes
         self.width_buckets = tuple(sorted(width_buckets))
         self.panel_buckets = tuple(sorted(panel_buckets))
         self.backend = backend
@@ -130,6 +145,15 @@ class GraphRegistry:
         self._invalidations = m.counter(
             "registry_invalidations_total",
             "Graphs dropped by drift invalidation")
+        # Byte accounting: every PlanArrays upload lands in the ledger,
+        # so eviction pressure and /memory report exact device bytes.
+        self.mem = MemLedger(metrics=m) if mem else None
+        self._pressure_evictions = m.counter(
+            "registry_pressure_evictions_total",
+            "Graphs evicted to satisfy the max_bytes budget")
+        self._pressure_rejects = m.counter(
+            "registry_pressure_rejects_total",
+            "Registrations rejected: plan bytes exceed max_bytes alone")
 
     # ------------------------------------------------------------ admit ---
     def register(self, a: SparseCSR, *, name: str | None = None,
@@ -168,9 +192,11 @@ class GraphRegistry:
                                           op_kwargs=op_kwargs)
                 entry.ops.update(built)
                 entry.plan_cache_hits += hits
+                self._account_entry(key, built)
             for w in warm_widths:    # aliases may warm new buckets too
                 for kind in entry.ops:
                     self.warm(name, kind, widths=(w,))
+            self.enforce_budget()
             return name
 
         built, hits = self._build(a, ops, mode=mode, mesh=mesh,
@@ -178,6 +204,19 @@ class GraphRegistry:
                                   op_kwargs=op_kwargs)
         if not built:
             raise ValueError(f"no operators requested: ops={ops!r}")
+
+        if self.max_bytes is not None:
+            # Admission: the projected serving-view footprint must fit
+            # the budget on its own — otherwise no eviction could admit
+            # it. Priced from host nbytes; nothing uploads here.
+            need = self._entry_bytes(built)
+            if need > self.max_bytes:
+                self._pressure_rejects.inc()
+                raise MemoryPressure(
+                    f"graph {name!r} needs {need} plan bytes for the "
+                    f"{self.backend!r} serving view; registry budget is "
+                    f"{self.max_bytes}", required=need,
+                    budget=self.max_bytes)
 
         vpu_elems = 0
         if "spmm" in built:
@@ -202,19 +241,78 @@ class GraphRegistry:
         self._names[name] = key
         self._registered_total.inc()
         self._resident.set(len(self._entries))
+        self._account_entry(key, built)
         while len(self._entries) > self.max_graphs:
             old_key, old = self._entries.popitem(last=False)
-            for alias in old.names:
-                # Only unbind aliases still pointing at the evicted
-                # entry — a rebound name belongs to a resident graph.
-                if self._names.get(alias) == old_key:
-                    self._names.pop(alias)
+            self._drop_entry(old_key, old)
             self._evictions.inc()
             self._resident.set(len(self._entries))
         for w in warm_widths:
             for kind in built:
                 self.warm(name, kind, widths=(w,))
+        self.enforce_budget()
         return name
+
+    def _account_entry(self, key: str, built: dict) -> None:
+        """Attach byte accounting to an entry's operators. Lazy
+        (Batched*) plans stream uploads into the ledger as they
+        materialize — already-resident uploads replay on attach;
+        sharded entries' eagerly-stacked arrays are accounted here."""
+        if self.mem is None:
+            return
+        for kind, op in built.items():
+            arrays = getattr(getattr(op, "op", op), "arrays", None)
+            if arrays is not None and hasattr(arrays, "set_accountant"):
+                arrays.set_accountant(self.mem.binder(key, kind))
+            elif getattr(op, "part", None) is not None:
+                for k, v in op.part.stacked.items():
+                    self.mem.account(key, kind, view_of_key(k), k,
+                                     int(v.nbytes), str(v.dtype))
+
+    def _entry_bytes(self, built: dict) -> int:
+        """Projected resident bytes of an entry once serving on the
+        registry backend (host nbytes — device dtypes match)."""
+        total = 0
+        for op in built.values():
+            arrays = getattr(getattr(op, "op", op), "arrays", None)
+            if arrays is not None and hasattr(arrays, "projected_nbytes"):
+                total += arrays.projected_nbytes(self.backend)
+            elif getattr(op, "part", None) is not None:
+                total += sum(int(v.nbytes)
+                             for v in op.part.stacked.values())
+        return total
+
+    def _drop_entry(self, old_key: str, old: RegisteredGraph) -> None:
+        """Unbind an evicted entry's aliases and release its bytes."""
+        for alias in old.names:
+            # Only unbind aliases still pointing at the evicted
+            # entry — a rebound name belongs to a resident graph.
+            if self._names.get(alias) == old_key:
+                self._names.pop(alias)
+        if self.mem is not None:
+            self.mem.release(old_key)
+            for op in old.ops.values():
+                arrays = getattr(getattr(op, "op", op), "arrays", None)
+                if arrays is not None and hasattr(arrays, "set_accountant"):
+                    arrays.set_accountant(None)
+
+    def enforce_budget(self) -> int:
+        """Evict least-recently-served entries until accounted resident
+        bytes fit ``max_bytes`` (at least one entry always stays).
+        Called after register/warm and at the end of engine flushes —
+        the points where residency grows. Returns evictions."""
+        if self.max_bytes is None or self.mem is None:
+            return 0
+        dropped = 0
+        while (self.mem.resident_bytes() > self.max_bytes
+               and len(self._entries) > 1):
+            old_key, old = self._entries.popitem(last=False)
+            self._drop_entry(old_key, old)
+            self._evictions.inc()
+            self._pressure_evictions.inc()
+            self._resident.set(len(self._entries))
+            dropped += 1
+        return dropped
 
     def _build(self, a: SparseCSR, kinds, *, mode, mesh, b_layout, tune,
                op_kwargs) -> tuple[dict[str, object], int]:
@@ -301,6 +399,7 @@ class GraphRegistry:
                        backend=self.backend, interpret=self.interpret)
                 compiled += len(cache) > before
         entry.warmed += compiled
+        self.enforce_budget()   # warmup materializes lazy views
         return compiled
 
     def invalidate(self, signature: str) -> int:
@@ -315,9 +414,7 @@ class GraphRegistry:
                   if key.startswith(signature + ":")]
         for key in doomed:
             old = self._entries.pop(key)
-            for alias in old.names:
-                if self._names.get(alias) == key:
-                    self._names.pop(alias)
+            self._drop_entry(key, old)
             self._invalidations.inc()
         self._resident.set(len(self._entries))
         return len(doomed)
@@ -353,7 +450,7 @@ class GraphRegistry:
         return min(best, top)
 
     def stats(self) -> dict:
-        return {
+        out = {
             "graphs_resident": len(self._entries),
             "registered_total": self._registered_total.value,
             "reuse_hits": self._reuse_hits.value,
@@ -366,6 +463,23 @@ class GraphRegistry:
             "names": {n: self._entries[k].key[:10]
                       for n, k in sorted(self._names.items())},
         }
+        if self.mem is not None:
+            out["resident_bytes"] = self.mem.resident_bytes()
+            out["peak_bytes"] = self.mem.peak_bytes()
+            out["max_bytes"] = self.max_bytes
+            out["pressure_evictions"] = self._pressure_evictions.value
+            out["pressure_rejects"] = self._pressure_rejects.value
+        return out
+
+    def memory_report(self, top_k: int = 8) -> dict:
+        """Exact device-byte attribution (see
+        :meth:`repro.obs.memstat.MemLedger.memory_report`); adds the
+        budget so dashboards can show headroom."""
+        if self.mem is None:
+            raise ValueError("byte accounting disabled (mem=False)")
+        report = self.mem.memory_report(top_k=top_k)
+        report["max_bytes"] = self.max_bytes
+        return report
 
 
 def as_csr(a, values: np.ndarray | None = None) -> SparseCSR:
