@@ -185,4 +185,9 @@ def run() -> list[tuple]:
                  f"{np.exp(np.mean(np.log(speedups_vs_bcoo))):.2f}x"))
     rows.extend(_segmented_rows())
     rows.append(_bit_identity_row(corpus()))
+    # Row-reordering e2e rows ride in this suite's committed JSON too:
+    # the speedup bar is what the bench-regression gate holds the pass to.
+    from benchmarks import bench_reorder
+
+    rows.extend(bench_reorder.run())
     return rows

@@ -15,7 +15,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig1,spmm,sddmm,"
-                         "ablations,gnn,roofline,dist,serve,chaos)")
+                         "ablations,gnn,roofline,dist,serve,chaos,"
+                         "reorder)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON: "
                          "[{name, us_per_call, derived}, ...]")
@@ -35,6 +36,7 @@ def main() -> None:
         bench_dist,
         bench_fig1_nnz1,
         bench_gnn_e2e,
+        bench_reorder,
         bench_roofline,
         bench_sddmm,
         bench_serve,
@@ -51,6 +53,7 @@ def main() -> None:
         "dist": bench_dist.run,
         "serve": bench_serve.run,
         "chaos": bench_chaos.run,
+        "reorder": bench_reorder.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     unknown = only - set(suites)

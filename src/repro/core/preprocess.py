@@ -35,12 +35,31 @@ from repro.core.formats import (
 from repro.core.windows import extract_windows, num_windows
 from repro.obs.trace import get_tracer
 from repro.sparse.matrix import SparseCSR
-from repro.tune.model import TuneConfig
+from repro.tune.model import TuneConfig, matrix_features
 
 DEFAULT_SPMM_THRESHOLD = 3    # paper Fig. 11: optimal ≈ 3 for 8×1 vectors
 DEFAULT_SDDMM_THRESHOLD = 24  # paper Fig. 11: optimal ≈ 24 for 8×16 blocks
 DEFAULT_BK_SPMM = 32          # condensed block depth (MXU k granularity)
 DEFAULT_BK_SDDMM = 16         # paper: 8×16 TC blocks for SDDMM
+
+
+def threshold_for_mode_spmm(mode: str, threshold: int | None = None) -> int:
+    """SpMM threshold under the single-resource ablation modes."""
+    if mode == "tcu":
+        return 1  # every non-zero vector passes → MXU-only
+    if mode == "vpu":
+        return WINDOW + 1  # nothing passes → VPU-only
+    return DEFAULT_SPMM_THRESHOLD if threshold is None else threshold
+
+
+def threshold_for_mode_sddmm(mode: str, bk: int,
+                             threshold: int | None = None) -> int:
+    """SDDMM block threshold under the single-resource ablation modes."""
+    if mode == "tcu":
+        return 1
+    if mode == "vpu":
+        return 8 * bk + 1  # no block can reach it → element path only
+    return DEFAULT_SDDMM_THRESHOLD if threshold is None else threshold
 
 
 def _resolve(explicit, cfg_value, default):
@@ -722,3 +741,204 @@ def preprocess_spmm_loop(a: SparseCSR, threshold: int = DEFAULT_SPMM_THRESHOLD,
             "has_vpu": bool(vpu_nnz), "balance": balance,
             "tc_segments": None, "vpu_segments": None, "seg_spt": 1}
     return SpMMPlan(a.m, a.k, a.nnz, threshold, tc, vpu, meta)
+
+
+# ------------------------------------------------------------------ Plan ---
+# The canonical constructor: one entry point wrapping the full
+# reorder → tune → preprocess pipeline, so operators, the partitioners
+# and the serving registry stop re-implementing the cfg-resolution dance.
+
+#: Process-local reorder decisions for runs without a PlanCache,
+#: keyed like the cache entries (pattern signature + op + threshold).
+_REORDER_MEMO: dict[str, dict] = {}
+
+
+def _reorder_store(cache):
+    from repro.tune.cache import PlanCache
+
+    if cache is None:
+        return None
+    return cache if isinstance(cache, PlanCache) else PlanCache(cache)
+
+
+def _get_reorder_decision(cache, key: str) -> dict | None:
+    pc = _reorder_store(cache)
+    return _REORDER_MEMO.get(key) if pc is None else pc.get_doc(key)
+
+
+def _put_reorder_decision(cache, key: str, doc: dict) -> None:
+    pc = _reorder_store(cache)
+    if pc is None:
+        _REORDER_MEMO[key] = doc
+    else:
+        pc.put_doc(key, doc)
+
+
+def _maybe_reorder(a: SparseCSR, *, op: str, spec, threshold: int, feat):
+    """Resolve ``spec.reorder`` for one build.
+
+    Returns ``(a_eff, reord, report, feat_eff)``: the matrix to
+    preprocess (reordered or original), the :class:`repro.reorder.Reordering`
+    (None when declined/off), the explain report, and the matrix
+    features describing ``a_eff`` (None if never computed).
+
+    ``auto`` prices the permutation from the same
+    :func:`~repro.tune.model.matrix_features` pass the tuner consumes —
+    projected TC-eligible nnz fraction at the resolved threshold — and
+    caches the decision in the PlanCache under the pattern signature.
+    """
+    mode = spec.reorder
+    if mode == "off" or a.nnz == 0 or a.m <= WINDOW:
+        return a, None, {"mode": mode, "enabled": False}, feat
+    from repro.reorder import (
+        apply_reorder,
+        decide_reorder,
+        reorder_gain,
+        reorder_rows,
+    )
+    from repro.tune.cache import reorder_key
+
+    key = reorder_key(a, op=op, threshold=threshold)
+    if mode == "auto":
+        cached = _get_reorder_decision(spec.tune_cache, key)
+        if cached is not None and not cached.get("enabled"):
+            # Declined before for this pattern: skip the sketch pass.
+            return a, None, {"mode": mode, **cached}, feat
+    reord = reorder_rows(a)
+    a_r = apply_reorder(a, reord)
+    if feat is None:
+        feat = matrix_features(a)
+    feat_r = matrix_features(a_r)
+    gain = reorder_gain(feat, feat_r, threshold)
+    enabled = True if mode == "on" else decide_reorder(gain)
+    report = {"mode": mode, "enabled": bool(enabled), **gain}
+    if mode == "auto":
+        _put_reorder_decision(spec.tune_cache, key,
+                              {"enabled": bool(enabled), **gain})
+    if not enabled:
+        return a, None, report, feat
+    return a_r, reord, report, feat_r
+
+
+def _remap_positions(pos: np.ndarray, nnz_perm: np.ndarray) -> np.ndarray:
+    """Rewrite a plan ``pos`` tensor (−1 padded) from reordered-canonical
+    to original-canonical nnz positions, so revaluation keeps taking
+    original-order ``edge_vals`` and sharded value slices stay slices."""
+    take = nnz_perm.astype(np.int32)
+    return np.where(pos >= 0, take[np.maximum(pos, 0)],
+                    np.int32(-1)).astype(np.int32)
+
+
+def _remap_spmm_plan(plan: SpMMPlan, nnz_perm: np.ndarray) -> SpMMPlan:
+    tc = plan.tc
+    if tc.pos is not None:
+        tc = dataclasses.replace(tc, pos=_remap_positions(tc.pos, nnz_perm))
+    vpu = plan.vpu
+    if vpu.pos is not None:
+        vpu = dataclasses.replace(vpu,
+                                  pos=_remap_positions(vpu.pos, nnz_perm))
+    return dataclasses.replace(plan, tc=tc, vpu=vpu)
+
+
+def _remap_sddmm_plan(plan: SDDMMPlan, nnz_perm: np.ndarray) -> SDDMMPlan:
+    out_pos = _remap_positions(plan.tc_out_pos, nnz_perm)
+    take = nnz_perm.astype(np.int32)
+    vpu = plan.vpu
+    # COOTiles pads with mask=False / out_pos=0 — keep padding at 0.
+    vpu = dataclasses.replace(
+        vpu, out_pos=np.where(vpu.mask, take[vpu.out_pos],
+                              np.int32(0)).astype(np.int32))
+    return dataclasses.replace(plan, tc_out_pos=out_pos, vpu=vpu)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """The supported entry point for building one operator's plan.
+
+    ``Plan.build(a, op, spec)`` wraps the whole pipeline: resolve the
+    :class:`repro.api.ExecSpec`, price/apply sparsity-aware reordering
+    (:mod:`repro.reorder`), tune (:mod:`repro.tune`), and preprocess —
+    with the reordered plan's ``pos`` maps rewritten back to
+    *original*-canonical nnz positions so ``edge_vals=`` revaluation,
+    segment tables and serving plan slices all work unchanged.
+
+    Fields:
+      op:      "spmm" | "sddmm"
+      spec:    the resolved :class:`~repro.api.ExecSpec`
+      cfg:     the tuned :class:`~repro.tune.model.TuneConfig`
+      plan:    the device plan (:class:`~repro.core.formats.SpMMPlan` /
+               :class:`~repro.core.formats.SDDMMPlan`); ``plan.meta
+               ["reorder"]`` records the decision and density deltas
+      a:       the matrix the plan was built on — the reordered view
+               when reordering was applied, else the input matrix
+      reorder: the :class:`repro.reorder.Reordering`, or None. SpMM
+               callers unpermute outputs with one
+               ``take(out, reorder.row_inv, axis=0)`` (or keep permuted
+               space and compose with ``row_perm`` themselves); SDDMM
+               outputs land in original canonical order already (the
+               scatter maps were rewritten).
+    """
+
+    op: str
+    spec: "object"
+    cfg: TuneConfig
+    plan: SpMMPlan | SDDMMPlan
+    a: SparseCSR
+    reorder: "object | None"
+
+    @classmethod
+    def build(cls, a: SparseCSR, op: str, spec=None, *, balance=None,
+              timer=None, feat=None) -> "Plan":
+        """Build the plan for ``op`` on ``a`` under ``spec``.
+
+        ``balance`` (explicit §4.3 caps), ``timer`` (search timing
+        hook) and ``feat`` (a precomputed ``matrix_features(a)``) are
+        expert escape hatches forwarded to the pipeline stages.
+        """
+        from repro.api import ExecSpec
+        from repro.tune import tune_sddmm, tune_spmm
+
+        spec = ExecSpec() if spec is None else spec
+        if op not in ("spmm", "sddmm"):
+            raise ValueError(f"op must be 'spmm' or 'sddmm', got {op!r}")
+        mode = spec.mode
+        if op == "spmm":
+            explicit = spec.threshold
+            forced = (threshold_for_mode_spmm(mode, explicit)
+                      if mode != "hybrid" else explicit)
+            guess = DEFAULT_SPMM_THRESHOLD if forced is None else forced
+        else:
+            explicit = spec.sddmm_threshold
+            bk_eff = DEFAULT_BK_SDDMM if spec.bk is None else spec.bk
+            forced = (threshold_for_mode_sddmm(mode, bk_eff, explicit)
+                      if mode != "hybrid" else explicit)
+            guess = DEFAULT_SDDMM_THRESHOLD if forced is None else forced
+        a_eff, reord, report, feat_eff = _maybe_reorder(
+            a, op=op, spec=spec, threshold=guess, feat=feat)
+        if op == "spmm":
+            cfg = tune_spmm(
+                a_eff, mode=mode, threshold=forced, tune=spec.tune,
+                n=spec.tune_n, backend=spec.tune_backend,
+                cache=spec.tune_cache, timer=timer, bk=spec.bk,
+                ts_tile=spec.ts_tile, feat=feat_eff)
+            thr = threshold_for_mode_spmm(mode, cfg.threshold)
+            plan = preprocess_spmm(a_eff, thr, bk=spec.bk,
+                                   ts_tile=spec.ts_tile, balance=balance,
+                                   cfg=cfg)
+            if reord is not None:
+                plan = _remap_spmm_plan(plan, reord.nnz_perm)
+        else:
+            cfg = tune_sddmm(
+                a_eff, mode=mode, threshold=forced, tune=spec.tune,
+                kf=spec.tune_kf, backend=spec.tune_backend,
+                cache=spec.tune_cache, timer=timer, bk=spec.bk,
+                ts_tile=spec.ts_tile, feat=feat_eff)
+            thr = threshold_for_mode_sddmm(mode, bk_eff, cfg.threshold)
+            plan = preprocess_sddmm(a_eff, thr, bk=spec.bk,
+                                    ts_tile=spec.ts_tile, balance=balance,
+                                    cfg=cfg)
+            if reord is not None:
+                plan = _remap_sddmm_plan(plan, reord.nnz_perm)
+        plan.meta["reorder"] = report
+        return cls(op=op, spec=spec, cfg=cfg, plan=plan, a=a_eff,
+                   reorder=reord)

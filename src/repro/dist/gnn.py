@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.api import UNSET, ExecSpec, resolve_spec
 from repro.dist.partition import partition_sddmm, partition_spmm
 from repro.dist.sparse import SHARD_AXIS, sddmm_sharded, spmm_sharded
 from repro.models.gnn import edge_softmax, gcn_forward, transpose_csr
@@ -43,25 +44,30 @@ class DistGraphOps:
     """
 
     def __init__(self, a: SparseCSR, mesh: Mesh, axis: str = SHARD_AXIS,
-                 mode: str = "hybrid",
-                 spmm_threshold: int | None = None,
-                 sddmm_threshold: int | None = None,
-                 tune: str = "model", backend: str = "xla",
-                 b_layout: str = "replicated", interpret: bool = True):
+                 mode=UNSET, spmm_threshold=UNSET, sddmm_threshold=UNSET,
+                 tune=UNSET, backend=UNSET, b_layout=UNSET,
+                 interpret=UNSET, *, spec: ExecSpec | None = None):
+        # ExecSpec's tune default ("model") matches this class's legacy
+        # default, so the spec-less path is unchanged. Reordering
+        # (spec.reorder) rides inside the partitions: their gathers are
+        # pre-composed with the permutations, so the VJP legs below
+        # stay original-order black boxes.
+        spec = resolve_spec(
+            spec, "DistGraphOps", mode=mode, threshold=spmm_threshold,
+            sddmm_threshold=sddmm_threshold, tune=tune, backend=backend,
+            b_layout=b_layout, interpret=interpret)
+        self.spec = spec
         self.mesh, self.axis = mesh, axis
-        self.backend, self.b_layout = backend, b_layout
-        self.interpret = interpret
+        self.backend, self.b_layout = spec.backend, spec.b_layout
+        self.interpret = spec.interpret
         self.a = a
         self.m, self.k = a.shape
         self.nnz = a.nnz
         n_shards = int(mesh.shape[axis])
-        self.part = partition_spmm(a, n_shards, mode=mode,
-                                   threshold=spmm_threshold, tune=tune)
+        self.part = partition_spmm(a, n_shards, spec=spec)
         at, self.perm = transpose_csr(a)
-        self.part_t = partition_spmm(at, n_shards, mode=mode,
-                                     threshold=spmm_threshold, tune=tune)
-        self.part_sd = partition_sddmm(a, n_shards, mode=mode,
-                                       threshold=sddmm_threshold, tune=tune)
+        self.part_t = partition_spmm(at, n_shards, spec=spec)
+        self.part_sd = partition_sddmm(a, n_shards, spec=spec)
         self.perm_dev = jnp.asarray(self.perm)
         rows, _, _ = a.to_coo()
         self.edge_row = jnp.asarray(rows, jnp.int32)

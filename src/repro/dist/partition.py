@@ -48,6 +48,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import UNSET, ExecSpec, resolve_spec
 from repro.core import preprocess
 from repro.core.balance import BalanceParams, balance_report
 from repro.core.formats import (
@@ -263,7 +264,7 @@ def _run_cfg_candidates(base: TuneConfig, op: str,
 
 def _search_run_cfg(part, op: str, a: SparseCSR, *, width: int,
                     mode: str, threshold, bk, ts_tile, backend: str,
-                    mesh, timer, cache) -> TuneConfig:
+                    mesh, timer, cache, reorder=None) -> TuneConfig:
     """Time candidate run_cfgs through the sharded apply (real mesh) or
     its vmap-over-shards emulation (no mesh — the same per-device
     program), memoized under a partition-level plan-cache key."""
@@ -273,7 +274,7 @@ def _search_run_cfg(part, op: str, a: SparseCSR, *, width: int,
     key = tune_key(a, op=f"{op}#p{part.n_shards}", width=width,
                    dtype="float32", backend=backend, mode=mode,
                    tune="search", threshold=threshold, bk=bk,
-                   ts_tile=ts_tile)
+                   ts_tile=ts_tile, reorder=reorder)
     hit = pc.get(key)
     if hit is not None:
         return hit
@@ -422,35 +423,52 @@ class SpMMPartition:
     run_cfg: TuneConfig              # kernel tiles every shard can run
     out_gather: jnp.ndarray          # (m,) stacked-row id of global row
     meta: dict[str, Any]
+    reorder: Any = None              # repro.reorder.Reordering | None
+    edge_perm: jnp.ndarray | None = None  # eff pos → original nnz pos
 
 
-def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
-                   threshold: int | None = None, tune="model",
-                   bk: int | None = None, ts_tile: int | None = None,
-                   tune_n: int = 128, tune_cache=None, tune_backend="xla",
-                   mesh=None, timer=None) -> SpMMPartition:
+def partition_spmm(a: SparseCSR, n_shards: int, *, mode=UNSET,
+                   threshold=UNSET, tune=UNSET, bk=UNSET, ts_tile=UNSET,
+                   tune_n=UNSET, tune_cache=UNSET, tune_backend=UNSET,
+                   mesh=None, timer=None,
+                   spec: ExecSpec | None = None) -> SpMMPartition:
     """Split + per-shard tune + preprocess + pad/stack for sharded SpMM.
 
-    ``tune`` accepts ``"model"``/``"search"``/``"off"``/a
+    Execution knobs live on one :class:`repro.api.ExecSpec` (``spec=``;
+    the legacy kwargs keep working through the deprecation shim).
+    ``spec.tune`` accepts ``"model"``/``"search"``/``"off"``/a
     :class:`TuneConfig`. ``"search"`` keeps per-shard thresholds
     model-tuned but empirically times candidate ``run_cfg`` kernel
     tiles through the sharded apply (on ``mesh`` when given, else a
     vmap-over-shards emulation of the same per-device program) and
     memoizes the winner under a partition-level key in the persistent
-    plan cache (``tune_cache``); ``tune_backend`` selects the timed
-    backend (tile candidates only differ on ``"pallas"``).
+    plan cache (``spec.tune_cache``); ``spec.tune_backend`` selects the
+    timed backend (tile candidates only differ on ``"pallas"``).
     ``bk``/``ts_tile`` are unified across shards (stacked block shapes
     must agree); each shard still gets its own threshold and tiles.
+
+    ``spec.reorder`` prices/applies the sparsity-aware row permutation
+    on the *full* matrix before sharding, so shard boundaries balance
+    the reordered segment curve. The composition is free at runtime:
+    ``out_gather`` is pre-composed with the inverse row permutation
+    (outputs come back in original row order) and ``edge_perm`` records
+    the one extra gather sharded revaluation needs.
     """
+    spec = resolve_spec(spec, "partition_spmm", mode=mode,
+                        threshold=threshold, tune=tune, bk=bk,
+                        ts_tile=ts_tile, tune_n=tune_n,
+                        tune_cache=tune_cache, tune_backend=tune_backend)
+    mode, threshold, tune = spec.mode, spec.threshold, spec.tune
+    bk, ts_tile = spec.bk, spec.ts_tile
+    tune_n, tune_cache = spec.tune_n, spec.tune_cache
+    tune_backend = spec.tune_backend
     if tune == "search":
-        part = partition_spmm(a, n_shards, mode=mode, threshold=threshold,
-                              tune="model", bk=bk, ts_tile=ts_tile,
-                              tune_n=tune_n)
+        part = partition_spmm(a, n_shards, spec=spec.replace(tune="model"))
         cfg = _search_run_cfg(part, "spmm", a, width=tune_n, mode=mode,
                               threshold=threshold, bk=part.run_cfg.bk,
                               ts_tile=part.run_cfg.ts_tile,
                               backend=tune_backend, mesh=mesh, timer=timer,
-                              cache=tune_cache)
+                              cache=tune_cache, reorder=spec.reorder)
         meta = {**part.meta, "run_cfg_source": cfg.source}
         return dataclasses.replace(part, run_cfg=cfg, meta=meta)
     # One global feature pass fixes the common block geometry (shared by
@@ -458,6 +476,11 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
     from repro.tune.model import matrix_features
 
     feat = matrix_features(a)
+    forced = (spmm_threshold_for_mode(mode, threshold)
+              if mode != "hybrid" else threshold)
+    guess = preprocess.DEFAULT_SPMM_THRESHOLD if forced is None else forced
+    a, reord, re_report, feat = preprocess._maybe_reorder(
+        a, op="spmm", spec=spec, threshold=guess, feat=feat)
     base = tune_spmm(a, mode=mode, threshold=threshold, tune=tune,
                      n=tune_n, bk=bk, ts_tile=ts_tile, feat=feat)
     bk_c = bk if bk is not None else (base.bk or preprocess.DEFAULT_BK_SPMM)
@@ -466,9 +489,6 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
     # tables must agree in width across shards.
     seg_ts = base.ts if base.ts is not None else BalanceParams.ts
     seg_cs = base.cs if base.cs is not None else BalanceParams.cs
-
-    forced = (spmm_threshold_for_mode(mode, threshold)
-              if mode != "hybrid" else threshold)
     curve = segment_curve(
         a, op="spmm", threshold=spmm_threshold_for_mode(
             mode, forced if forced is not None else base.threshold),
@@ -530,6 +550,11 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
     for shard in shards:
         rr = np.arange(shard.rows)
         out_gather[shard.row_start + rr] = shard.index * rows_pad + rr
+    if reord is not None:
+        # Compose the unpermute into the existing reassembly gather:
+        # original row j lives at reordered row row_inv[j]. Zero extra
+        # runtime cost — same single take as before.
+        out_gather = out_gather[reord.row_inv]
 
     host = dict(
         tc_vals=tc_vals, tc_cols=tc_cols, tc_rank=tc_rank,
@@ -544,6 +569,7 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
         "halo_rows": [int(s.halo.size) for s in shards],
         "shard_nnz": [s.nnz for s in shards],
         "mode": mode,
+        "reorder": re_report,
         **_segment_load_meta(plans),
     }
     _publish_partition_gauges("spmm", meta, n_shards)
@@ -551,7 +577,10 @@ def partition_spmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
                          wmax, rows_pad,
                          _combine_run_cfg([s.cfg for s in shards], bk_c,
                                           ts_c, seg_ts, seg_cs),
-                         jnp.asarray(out_gather), meta)
+                         jnp.asarray(out_gather), meta,
+                         reorder=reord,
+                         edge_perm=(None if reord is None
+                                    else jnp.asarray(reord.nnz_perm)))
 
 
 def _stack_sddmm_segments(plans, n_shards) -> dict[str, np.ndarray]:
@@ -611,31 +640,48 @@ class SDDMMPartition:
     x_take: jnp.ndarray              # (P*rows_pad,) global X row per slot
     nnz_gather: jnp.ndarray          # (nnz,) stacked slot of global nnz p
     meta: dict[str, Any]
+    reorder: Any = None              # repro.reorder.Reordering | None
 
 
-def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
-                    threshold: int | None = None, tune="model",
-                    bk: int | None = None, ts_tile: int | None = None,
-                    tune_kf: int = 128, tune_cache=None,
-                    tune_backend="xla", mesh=None,
-                    timer=None) -> SDDMMPartition:
+def partition_sddmm(a: SparseCSR, n_shards: int, *, mode=UNSET,
+                    threshold=UNSET, tune=UNSET, bk=UNSET, ts_tile=UNSET,
+                    tune_kf=UNSET, tune_cache=UNSET, tune_backend=UNSET,
+                    mesh=None, timer=None,
+                    spec: ExecSpec | None = None) -> SDDMMPartition:
     """SDDMM flavour of :func:`partition_spmm` (same sharding geometry;
     scores come back in canonical global nnz order via ``nnz_gather``;
-    same partition-level ``tune="search"`` semantics)."""
+    same partition-level ``tune="search"`` and ``spec.reorder``
+    semantics — the legacy ``threshold=`` kwarg maps to
+    ``ExecSpec.sddmm_threshold``). Under reordering, ``x_take`` is
+    pre-composed with the row permutation and ``nnz_gather`` with the
+    inverse nnz permutation, so X arrives and scores return in original
+    order at zero extra runtime cost."""
+    spec = resolve_spec(spec, "partition_sddmm", mode=mode,
+                        sddmm_threshold=threshold, tune=tune, bk=bk,
+                        ts_tile=ts_tile, tune_kf=tune_kf,
+                        tune_cache=tune_cache, tune_backend=tune_backend)
+    mode, threshold, tune = spec.mode, spec.sddmm_threshold, spec.tune
+    bk, ts_tile = spec.bk, spec.ts_tile
+    tune_kf, tune_cache = spec.tune_kf, spec.tune_cache
+    tune_backend = spec.tune_backend
     if tune == "search":
-        part = partition_sddmm(a, n_shards, mode=mode, threshold=threshold,
-                               tune="model", bk=bk, ts_tile=ts_tile,
-                               tune_kf=tune_kf)
+        part = partition_sddmm(a, n_shards, spec=spec.replace(tune="model"))
         cfg = _search_run_cfg(part, "sddmm", a, width=tune_kf, mode=mode,
                               threshold=threshold, bk=part.run_cfg.bk,
                               ts_tile=part.run_cfg.ts_tile,
                               backend=tune_backend, mesh=mesh, timer=timer,
-                              cache=tune_cache)
+                              cache=tune_cache, reorder=spec.reorder)
         meta = {**part.meta, "run_cfg_source": cfg.source}
         return dataclasses.replace(part, run_cfg=cfg, meta=meta)
     from repro.tune.model import matrix_features
 
     feat = matrix_features(a)
+    bk_eff = preprocess.DEFAULT_BK_SDDMM if bk is None else bk
+    forced0 = (sddmm_threshold_for_mode(mode, bk_eff, threshold)
+               if mode != "hybrid" else threshold)
+    guess = preprocess.DEFAULT_SDDMM_THRESHOLD if forced0 is None else forced0
+    a, reord, re_report, feat = preprocess._maybe_reorder(
+        a, op="sddmm", spec=spec, threshold=guess, feat=feat)
     base = tune_sddmm(a, mode=mode, threshold=threshold, tune=tune,
                       kf=tune_kf, bk=bk, ts_tile=ts_tile, feat=feat)
     bk_c = bk if bk is not None else (base.bk or preprocess.DEFAULT_BK_SDDMM)
@@ -698,6 +744,12 @@ def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
                              0, max(a.m - 1, 0))
         nnz_gather[shard.nnz_start:shard.nnz_start + shard.nnz] = \
             shard.index * nnz_pad + np.arange(shard.nnz)
+    if reord is not None:
+        # Compose the un-reorder into the existing gathers: X slots name
+        # original rows directly (eff row i = original row row_perm[i]),
+        # and original nnz p sits at reordered position nnz_inv[p].
+        x_take = reord.row_perm.astype(np.int32)[x_take]
+        nnz_gather = nnz_gather[reord.nnz_inv]
 
     host = dict(
         tc_cols=tc_cols, tc_bitmap=tc_bitmap, tc_window=tc_window,
@@ -711,6 +763,7 @@ def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
         "halo_rows": [int(s.halo.size) for s in shards],
         "shard_nnz": [s.nnz for s in shards],
         "mode": mode,
+        "reorder": re_report,
         **_segment_load_meta(plans),
     }
     _publish_partition_gauges("sddmm", meta, n_shards)
@@ -718,4 +771,5 @@ def partition_sddmm(a: SparseCSR, n_shards: int, *, mode: str = "hybrid",
                           wmax, rows_pad, nnz_pad,
                           _combine_run_cfg([s.cfg for s in shards],
                                            bk_c, ts_c, seg_ts, seg_cs),
-                          jnp.asarray(x_take), jnp.asarray(nnz_gather), meta)
+                          jnp.asarray(x_take), jnp.asarray(nnz_gather), meta,
+                          reorder=reord)

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.api import ExecSpec, resolve_spec
 from repro.core.spmm import LibraSpMM
 from repro.core.sddmm import LibraSDDMM
 from repro.kernels import ref
@@ -93,6 +94,11 @@ def spmm_sharded(part: SpMMPartition, b: jnp.ndarray, *, mesh: Mesh,
     assert b_layout in _LAYOUTS, b_layout
     assert int(mesh.shape[axis]) == part.n_shards, (mesh.shape, part.n_shards)
     rowshard = b_layout == "rowshard"
+    if edge_vals is not None and part.edge_perm is not None:
+        # Reordered partition: shard plan positions index the reordered
+        # canonical nnz order — gather the caller's original-order
+        # values into it once, before the replicated broadcast.
+        edge_vals = jnp.take(edge_vals, part.edge_perm)
 
     def body(stacked, b_in, *ev):
         local, halo = _local(stacked)
@@ -159,8 +165,11 @@ class BatchedSpMM:
     (batch, m, n)`` via ``vmap`` over the single-device fused apply,
     AOT-compiled once per (batch shape, dtype, backend)."""
 
-    def __init__(self, a, **op_kwargs):
-        self.op = LibraSpMM(a, **op_kwargs)
+    def __init__(self, a, spec: ExecSpec | None = None, *, balance=None,
+                 **op_kwargs):
+        if op_kwargs:
+            spec = resolve_spec(spec, "BatchedSpMM", **op_kwargs)
+        self.op = LibraSpMM(a, spec=spec, balance=balance)
         self._cache: dict = {}
 
     def __call__(self, b_stack: jnp.ndarray, backend: str = "xla",
@@ -172,12 +181,16 @@ class BatchedSpMM:
         op = self.op
         assert b_stack.ndim == 3 and b_stack.shape[1] == op.k, b_stack.shape
         has_ev = edge_vals is not None
+        unperm = op._row_unperm
 
         def batched(arrs, bb, *ev):
-            return spmm_apply_stack(arrs, bb, m=op.m, nwin=op.nwin,
-                                    backend=backend, cfg=op.tune_config,
-                                    interpret=interpret,
-                                    edge_vals=ev[0] if ev else None)
+            out = spmm_apply_stack(arrs, bb, m=op.m, nwin=op.nwin,
+                                   backend=backend, cfg=op.tune_config,
+                                   interpret=interpret,
+                                   edge_vals=ev[0] if ev else None)
+            if unperm is not None:   # reordered plan: restore row order
+                out = jnp.take(out, unperm, axis=1)
+            return out
 
         # Lazy backend view; with edge_vals the revalue maps replace
         # the baked-in value tensors (rebuilt in-trace per panel).
@@ -194,8 +207,13 @@ class BatchedSDDMM:
     """``(batch, m, kf) × (batch, k, kf) → (batch, nnz)`` via ``vmap``
     over the single-device fused apply (one AOT executable per shape)."""
 
-    def __init__(self, a, **op_kwargs):
-        self.op = LibraSDDMM(a, **op_kwargs)
+    def __init__(self, a, spec: ExecSpec | None = None, *, balance=None,
+                 **op_kwargs):
+        if op_kwargs:
+            if "threshold" in op_kwargs:
+                op_kwargs["sddmm_threshold"] = op_kwargs.pop("threshold")
+            spec = resolve_spec(spec, "BatchedSDDMM", **op_kwargs)
+        self.op = LibraSDDMM(a, spec=spec, balance=balance)
         self._cache: dict = {}
 
     def __call__(self, x_stack: jnp.ndarray, y_stack: jnp.ndarray,
@@ -203,8 +221,14 @@ class BatchedSDDMM:
                  ) -> jnp.ndarray:
         op = self.op
         assert x_stack.ndim == 3 and y_stack.ndim == 3
+        perm = op._row_perm
+        if perm is not None and x_stack.shape[1] > op.m:
+            perm = jnp.concatenate(
+                [perm, jnp.arange(op.m, x_stack.shape[1])])
 
         def batched(arrs, xx, yy):
+            if perm is not None:   # reordered plan: permute the X rows
+                xx = jnp.take(xx, perm, axis=1)
             return sddmm_apply_stack(arrs, xx, yy, nnz=op.nnz,
                                      backend=backend, cfg=op.tune_config,
                                      interpret=interpret)
@@ -233,15 +257,18 @@ class ShardedSpMM:
     """
 
     def __init__(self, a, mesh: Mesh, *, axis: str = SHARD_AXIS,
-                 backend: str = "xla", b_layout: str = "replicated",
-                 interpret: bool = True, **part_kwargs):
+                 spec: ExecSpec | None = None, timer=None, **part_kwargs):
+        if part_kwargs:
+            spec = resolve_spec(spec, "ShardedSpMM", **part_kwargs)
+        spec = ExecSpec() if spec is None else spec
+        self.spec = spec
         self.part = (a if isinstance(a, SpMMPartition)
                      else partition_spmm(a, int(mesh.shape[axis]),
-                                         **part_kwargs))
+                                         spec=spec, timer=timer))
         assert int(mesh.shape[axis]) == self.part.n_shards
         self.mesh, self.axis = mesh, axis
-        self.backend, self.b_layout = backend, b_layout
-        self.interpret = interpret
+        self.backend, self.b_layout = spec.backend, spec.b_layout
+        self.interpret = spec.interpret
         self.m, self.k, self.nnz = self.part.m, self.part.k, self.part.nnz
         self._cache: dict = {}
 
@@ -271,15 +298,22 @@ class ShardedSDDMM:
     """Engine-callable sharded SDDMM — see :class:`ShardedSpMM`."""
 
     def __init__(self, a, mesh: Mesh, *, axis: str = SHARD_AXIS,
-                 backend: str = "xla", y_layout: str = "replicated",
-                 interpret: bool = True, **part_kwargs):
+                 spec: ExecSpec | None = None, timer=None, **part_kwargs):
+        if part_kwargs:
+            if "y_layout" in part_kwargs:
+                part_kwargs["b_layout"] = part_kwargs.pop("y_layout")
+            if "threshold" in part_kwargs:
+                part_kwargs["sddmm_threshold"] = part_kwargs.pop("threshold")
+            spec = resolve_spec(spec, "ShardedSDDMM", **part_kwargs)
+        spec = ExecSpec() if spec is None else spec
+        self.spec = spec
         self.part = (a if isinstance(a, SDDMMPartition)
                      else partition_sddmm(a, int(mesh.shape[axis]),
-                                          **part_kwargs))
+                                          spec=spec, timer=timer))
         assert int(mesh.shape[axis]) == self.part.n_shards
         self.mesh, self.axis = mesh, axis
-        self.backend, self.y_layout = backend, y_layout
-        self.interpret = interpret
+        self.backend, self.y_layout = spec.backend, spec.b_layout
+        self.interpret = spec.interpret
         self.m, self.k, self.nnz = self.part.m, self.part.k, self.part.nnz
         self._cache: dict = {}
 

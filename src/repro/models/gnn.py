@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import UNSET, ExecSpec, resolve_spec
 from repro.core import preprocess
 from repro.core.formats import device_arrays
 from repro.core.windows import num_windows
@@ -35,56 +36,72 @@ def transpose_csr(a: SparseCSR) -> tuple[SparseCSR, np.ndarray]:
 class GraphOps:
     """Preprocessed Libra plans for one graph: A, A^T, and SDDMM(A).
 
-    ``tune`` threads the plan-selection subsystem (:mod:`repro.tune`)
-    through the training path: ``"off"`` (the default here, for cheap
-    construction and backward compatibility) keeps the module defaults;
-    ``"model"`` — recommended for real training runs, and the default
-    on :class:`repro.dist.DistGraphOps` — picks per-graph thresholds
-    and tile sizes analytically (A and Aᵀ each get their own config —
-    their sparsity patterns differ).
+    All three legs are built through the canonical
+    :meth:`repro.core.preprocess.Plan.build` pipeline under one frozen
+    :class:`repro.api.ExecSpec` (``spec=``; the legacy kwargs keep
+    working via the deprecation shim — ``spmm_threshold`` maps to
+    ``ExecSpec.threshold``, ``sddmm_threshold`` to
+    ``ExecSpec.sddmm_threshold``). For backward compatibility the
+    spec-less default stays ``tune="off"`` (cheap construction);
+    ``tune="model"`` — recommended for real training runs, and the
+    default on :class:`repro.dist.DistGraphOps` — picks per-graph
+    thresholds and tile sizes analytically (A and Aᵀ each get their own
+    config — their sparsity patterns differ).
 
     ``backend`` selects the apply path for *every* op in the training
     graph, forward and backward: ``"xla"`` (default) runs the jnp
     reference, ``"pallas"`` the TPU kernels (interpret mode on CPU).
     The tuned configs are threaded into each apply, so a tuned operator
     trains through the exact plan the tuner priced.
+
+    ``spec.reorder`` densifies each leg independently (A, Aᵀ and the
+    SDDMM mask each get their own row permutation priced on their own
+    pattern); every leg stays an original-order-in/original-order-out
+    black box — its plan's nnz maps are rewritten to its matrix's
+    canonical order at build time and the row permutes ride inside the
+    differentiable applies — so edge values, the Aᵀ edge permutation
+    and the softmax segment ids never change.
     """
 
-    def __init__(self, a: SparseCSR, mode: str = "hybrid",
-                 spmm_threshold: int | None = None,
-                 sddmm_threshold: int | None = None,
-                 tune: str = "off", backend: str = "xla",
-                 interpret: bool = True):
-        from repro.core.sddmm import threshold_for_mode as sddmm_thr
-        from repro.core.spmm import threshold_for_mode as spmm_thr
-        from repro.tune import matrix_features, tune_sddmm, tune_spmm
+    def __init__(self, a: SparseCSR, mode=UNSET, spmm_threshold=UNSET,
+                 sddmm_threshold=UNSET, tune=UNSET, backend=UNSET,
+                 interpret=UNSET, reorder=UNSET, *, spec=None):
+        base = spec if spec is not None else ExecSpec(tune="off")
+        spec = resolve_spec(base, "GraphOps", mode=mode,
+                            threshold=spmm_threshold,
+                            sddmm_threshold=sddmm_threshold, tune=tune,
+                            backend=backend, interpret=interpret,
+                            reorder=reorder)
+        from repro.tune import matrix_features
 
+        self.spec = spec
         self.a = a
         self.m, self.k = a.shape
         self.nnz = a.nnz
-        self.backend = backend
-        self.interpret = interpret
+        self.backend = spec.backend
+        self.interpret = spec.interpret
         self.nwin = num_windows(a.m)
         at, self.perm = transpose_csr(a)
         self.nwin_t = num_windows(at.m)
         # One feature pass per matrix, shared by the SpMM and SDDMM tuners.
-        feat_a = matrix_features(a) if tune == "model" else None
-        self.cfg = tune_spmm(a, mode=mode, threshold=spmm_threshold,
-                             tune=tune, feat=feat_a)
-        self.cfg_t = tune_spmm(at, mode=mode, threshold=spmm_threshold,
-                               tune=tune)
-        self.cfg_sd = tune_sddmm(a, mode=mode, threshold=sddmm_threshold,
-                                 tune=tune, feat=feat_a)
-        t_sp = spmm_thr(mode, self.cfg.threshold)
-        t_sp_t = spmm_thr(mode, self.cfg_t.threshold)
-        t_sd = sddmm_thr(mode, preprocess.DEFAULT_BK_SDDMM,
-                         self.cfg_sd.threshold)
-        self.arrs = device_arrays(
-            preprocess.preprocess_spmm(a, t_sp, cfg=self.cfg))
-        self.arrs_t = device_arrays(
-            preprocess.preprocess_spmm(at, t_sp_t, cfg=self.cfg_t))
-        self.arrs_sd = device_arrays(
-            preprocess.preprocess_sddmm(a, t_sd, cfg=self.cfg_sd))
+        feat_a = matrix_features(a) if spec.tune == "model" else None
+        built = preprocess.Plan.build(a, "spmm", spec, feat=feat_a)
+        built_t = preprocess.Plan.build(at, "spmm", spec)
+        built_sd = preprocess.Plan.build(a, "sddmm", spec, feat=feat_a)
+        self.cfg, self.cfg_t = built.cfg, built_t.cfg
+        self.cfg_sd = built_sd.cfg
+        self.arrs = device_arrays(built.plan)
+        self.arrs_t = device_arrays(built_t.plan)
+        self.arrs_sd = device_arrays(built_sd.plan)
+        # Per-leg reorder epilogues/prologues (None when not reordered):
+        # the plans' nnz maps already point at each leg's own original
+        # canonical order, so values flow unchanged — only rows permute.
+        self._unperm = (None if built.reorder is None
+                        else jnp.asarray(built.reorder.row_inv))
+        self._unperm_t = (None if built_t.reorder is None
+                          else jnp.asarray(built_t.reorder.row_inv))
+        self._x_perm = (None if built_sd.reorder is None
+                        else jnp.asarray(built_sd.reorder.row_perm))
         self.perm_dev = jnp.asarray(self.perm)
         # Row id per edge (for softmax over incident edges).
         rows, _, _ = a.to_coo()
@@ -102,16 +119,28 @@ class GraphOps:
 
     def fixed_spmm(self, b, backend: str | None = None):
         """C = A @ B with the plan's baked-in values (no grad wrt values)."""
-        return spmm_apply(self.arrs, b, m=self.m, nwin=self.nwin,
-                          backend=backend or self.backend, cfg=self.cfg,
-                          interpret=self.interpret)
+        out = spmm_apply(self.arrs, b, m=self.m, nwin=self.nwin,
+                         backend=backend or self.backend, cfg=self.cfg,
+                         interpret=self.interpret)
+        return _unreorder(out, self._unperm)
+
+
+def _unreorder(out, unperm):
+    """Restore original row order after a reordered-plan SpMM apply."""
+    return out if unperm is None else jnp.take(out, unperm, axis=0)
+
+
+def _reorder_x(x, perm):
+    """Gather X into the reordered row space of a reordered SDDMM plan."""
+    return x if perm is None else jnp.take(x, perm, axis=0)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _spmm_ev(g: GraphOps, edge_vals, b):
     arrs = ref.revalue_spmm_arrays(g.arrs, edge_vals)
-    return spmm_apply(arrs, b, m=g.m, nwin=g.nwin, backend=g.backend,
-                      cfg=g.cfg, interpret=g.interpret)
+    out = spmm_apply(arrs, b, m=g.m, nwin=g.nwin, backend=g.backend,
+                     cfg=g.cfg, interpret=g.interpret)
+    return _unreorder(out, g._unperm)
 
 
 def _spmm_ev_fwd(g, edge_vals, b):
@@ -122,10 +151,12 @@ def _spmm_ev_bwd(g, resid, d_c):
     edge_vals, b = resid
     # dB = A(v)^T @ dC — SpMM on the transposed plan with permuted values.
     arrs_t = ref.revalue_spmm_arrays(g.arrs_t, edge_vals[g.perm_dev])
-    d_b = spmm_apply(arrs_t, d_c, m=g.k, nwin=g.nwin_t, backend=g.backend,
-                     cfg=g.cfg_t, interpret=g.interpret)
+    d_b = _unreorder(
+        spmm_apply(arrs_t, d_c, m=g.k, nwin=g.nwin_t, backend=g.backend,
+                   cfg=g.cfg_t, interpret=g.interpret), g._unperm_t)
     # dv[p] = dC[row_p] · B[col_p] — SDDMM with A's sparsity.
-    d_vals = sddmm_apply(g.arrs_sd, d_c, b, nnz=g.nnz, backend=g.backend,
+    d_vals = sddmm_apply(g.arrs_sd, _reorder_x(d_c, g._x_perm), b,
+                         nnz=g.nnz, backend=g.backend,
                          cfg=g.cfg_sd, interpret=g.interpret)
     return d_vals.astype(edge_vals.dtype), d_b.astype(b.dtype)
 
@@ -135,8 +166,9 @@ _spmm_ev.defvjp(_spmm_ev_fwd, _spmm_ev_bwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _sddmm_ev(g: GraphOps, x, y):
-    return sddmm_apply(g.arrs_sd, x, y, nnz=g.nnz, backend=g.backend,
-                       cfg=g.cfg_sd, interpret=g.interpret)
+    return sddmm_apply(g.arrs_sd, _reorder_x(x, g._x_perm), y, nnz=g.nnz,
+                       backend=g.backend, cfg=g.cfg_sd,
+                       interpret=g.interpret)
 
 
 def _sddmm_ev_fwd(g, x, y):
@@ -147,11 +179,13 @@ def _sddmm_ev_bwd(g, resid, d_vals):
     x, y = resid
     # dX = A(dv) @ Y ; dY = A(dv)^T @ X — both SpMMs through Libra plans.
     arrs = ref.revalue_spmm_arrays(g.arrs, d_vals)
-    d_x = spmm_apply(arrs, y, m=g.m, nwin=g.nwin, backend=g.backend,
-                     cfg=g.cfg, interpret=g.interpret)
+    d_x = _unreorder(
+        spmm_apply(arrs, y, m=g.m, nwin=g.nwin, backend=g.backend,
+                   cfg=g.cfg, interpret=g.interpret), g._unperm)
     arrs_t = ref.revalue_spmm_arrays(g.arrs_t, d_vals[g.perm_dev])
-    d_y = spmm_apply(arrs_t, x, m=g.k, nwin=g.nwin_t, backend=g.backend,
-                     cfg=g.cfg_t, interpret=g.interpret)
+    d_y = _unreorder(
+        spmm_apply(arrs_t, x, m=g.k, nwin=g.nwin_t, backend=g.backend,
+                   cfg=g.cfg_t, interpret=g.interpret), g._unperm_t)
     return d_x.astype(x.dtype), d_y.astype(y.dtype)
 
 

@@ -186,6 +186,7 @@ def explain_plan(plan, *, cfg=None, a=None, kind: str | None = None) -> dict:
         "tc_nnz": int(meta.get("tc_nnz", 0)),
         "vpu_nnz": int(meta.get("vpu_nnz", 0)),
         "density_hist": _window_hist(plan, a),
+        "reorder": meta.get("reorder"),
         "segments": _segment_report(plan),
         "padding": _padding_report(plan, kind),
         "occupancy": _occupancy_report(cfg, plan, kind),
@@ -273,6 +274,7 @@ def explain_partition(part) -> dict:
         "kind": "partition",
         "n_shards": len(nnz),
         "shard_nnz": [int(x) for x in nnz],
+        "reorder": meta.get("reorder"),
         "nnz_balance": meta.get("balance"),
         "segment_balance": meta.get("segment_balance"),
         "shard_segments": meta.get("shard_segments"),
@@ -308,6 +310,26 @@ def render_table(report: dict, *, title: str | None = None) -> str:
         rows.append(("window_density", _fmt(dh["window_density"])))
         rows.append(("vec_occupancy[1..8]",
                      " ".join(str(c) for c in dh["vector_occupancy"])))
+    ro = report.get("reorder")
+    if ro:
+        if ro.get("enabled"):
+            rows.append(("reorder", f"chosen ({ro.get('mode', '?')}): "
+                                    f"tc_frac {ro['tc_frac_before']:.3f}"
+                                    f" -> {ro['tc_frac_after']:.3f}"))
+            rows.append(("reorder_density",
+                         f"{ro['window_density_before']:.3f} -> "
+                         f"{ro['window_density_after']:.3f}"))
+            if "occupancy_before" in ro:
+                rows.append(("occupancy_before[1..8]",
+                             " ".join(str(c)
+                                      for c in ro["occupancy_before"])))
+                rows.append(("occupancy_after[1..8]",
+                             " ".join(str(c)
+                                      for c in ro["occupancy_after"])))
+        else:
+            why = (f"gain {ro['gain']:.3f}" if "gain" in ro
+                   else ro.get("mode", "off"))
+            rows.append(("reorder", f"skipped ({why})"))
     segs = report.get("segments")
     if segs:
         for stream in ("tc", "vpu"):
@@ -364,6 +386,12 @@ def render_table(report: dict, *, title: str | None = None) -> str:
         sb = report.get("segment_balance")
         if sb:
             rows.append(("segment max/mean", _fmt(sb["max_over_mean"])))
+        ro = report.get("reorder")
+        if ro:
+            rows.append(("reorder",
+                         (f"chosen: tc_frac {ro['tc_frac_before']:.3f} -> "
+                          f"{ro['tc_frac_after']:.3f}")
+                         if ro.get("enabled") else "skipped"))
     w = max(len(k) for k, _ in rows)
     lines = [f"{k:>{w}} | {v}" for k, v in rows]
     bar = "-" * max(len(line) for line in lines)

@@ -43,6 +43,7 @@ from collections import OrderedDict
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import UNSET, ExecSpec, resolve_spec
 from repro.core.formats import view_of_key
 from repro.obs.memstat import MemLedger, MemoryPressure
 from repro.obs.metrics import MetricsRegistry
@@ -157,20 +158,40 @@ class GraphRegistry:
 
     # ------------------------------------------------------------ admit ---
     def register(self, a: SparseCSR, *, name: str | None = None,
-                 ops=("spmm", "sddmm"), mode: str = "hybrid",
-                 mesh=None, b_layout: str = "replicated",
-                 tune=None, warm_widths=(), **op_kwargs) -> str:
+                 ops=("spmm", "sddmm"), mode=UNSET, mesh=None,
+                 b_layout=UNSET, tune=UNSET, warm_widths=(),
+                 spec: ExecSpec | None = None, **op_kwargs) -> str:
         """Register a sparse matrix; returns the (possibly generated)
-        tenant name. Re-registering an identical pattern (same mode and
-        layout) aliases the existing entry instead of rebuilding.
+        tenant name. Re-registering an identical pattern (same mode,
+        layout and reorder policy) aliases the existing entry instead
+        of rebuilding.
+
+        Execution knobs ride one :class:`repro.api.ExecSpec` (``spec=``;
+        its ``reorder`` field is picked up transparently — the built
+        operators un-permute internally, so serving callers see original
+        row/nnz order). When no spec is given, the registry's own
+        construction defaults (``tune``, ``tune_cache``, ``backend``,
+        ``interpret``) seed it; the legacy kwargs (``mode=``, ``tune=``,
+        ``b_layout=``, …) keep working through the deprecation shim and
+        override the spec.
 
         ``mesh`` switches the entry to window-sharded execution
         (:class:`~repro.dist.sparse.ShardedSpMM`); ``warm_widths``
         AOT-compiles those width buckets across all panel buckets right
         away (see :meth:`warm`).
         """
-        tune = self.tune if tune is None else tune
+        base = spec if spec is not None else ExecSpec(
+            tune=self.tune, tune_cache=self.tune_cache,
+            backend=self.backend, interpret=self.interpret)
+        spec = resolve_spec(
+            base, "GraphRegistry.register", mode=mode, b_layout=b_layout,
+            tune=UNSET if tune is None else tune, **op_kwargs)
+        mode, b_layout = spec.mode, spec.b_layout
         layout = "sharded" if mesh is not None else "batched"
+        if spec.reorder != "off":
+            # Reordered plans are different assets: don't alias them
+            # with unreordered registrations of the same pattern.
+            layout += f"+reorder-{spec.reorder}"
         key = graph_key(a, mode, layout)
         name = name if name is not None else f"g-{key[:10]}"
         entry = self._entries.get(key)
@@ -187,9 +208,7 @@ class GraphRegistry:
             self._reuse_hits.inc()
             missing = [kind for kind in ops if kind not in entry.ops]
             if missing:   # alias asked for more operators: top up in place
-                built, hits = self._build(a, missing, mode=mode, mesh=mesh,
-                                          b_layout=b_layout, tune=tune,
-                                          op_kwargs=op_kwargs)
+                built, hits = self._build(a, missing, mesh=mesh, spec=spec)
                 entry.ops.update(built)
                 entry.plan_cache_hits += hits
                 self._account_entry(key, built)
@@ -199,9 +218,7 @@ class GraphRegistry:
             self.enforce_budget()
             return name
 
-        built, hits = self._build(a, ops, mode=mode, mesh=mesh,
-                                  b_layout=b_layout, tune=tune,
-                                  op_kwargs=op_kwargs)
+        built, hits = self._build(a, ops, mesh=mesh, spec=spec)
         if not built:
             raise ValueError(f"no operators requested: ops={ops!r}")
 
@@ -314,8 +331,8 @@ class GraphRegistry:
             dropped += 1
         return dropped
 
-    def _build(self, a: SparseCSR, kinds, *, mode, mesh, b_layout, tune,
-               op_kwargs) -> tuple[dict[str, object], int]:
+    def _build(self, a: SparseCSR, kinds, *, mesh,
+               spec: ExecSpec) -> tuple[dict[str, object], int]:
         from repro.dist.sparse import (BatchedSDDMM, BatchedSpMM,
                                        ShardedSDDMM, ShardedSpMM)
 
@@ -324,21 +341,11 @@ class GraphRegistry:
         for kind in kinds:
             if mesh is None:
                 cls = BatchedSpMM if kind == "spmm" else BatchedSDDMM
-                op = cls(a, mode=mode, tune=tune,
-                         tune_cache=self.tune_cache, **op_kwargs)
+                op = cls(a, spec=spec)
                 hits += op.op.tune_config.source == "cache"
-            elif kind == "spmm":
-                op = ShardedSpMM(a, mesh, backend=self.backend,
-                                 b_layout=b_layout, interpret=self.interpret,
-                                 mode=mode, tune=tune,
-                                 tune_cache=self.tune_cache, **op_kwargs)
-                hits += op.tune_config.source == "cache"
             else:
-                op = ShardedSDDMM(a, mesh, backend=self.backend,
-                                  y_layout=b_layout,
-                                  interpret=self.interpret,
-                                  mode=mode, tune=tune,
-                                  tune_cache=self.tune_cache, **op_kwargs)
+                cls = ShardedSpMM if kind == "spmm" else ShardedSDDMM
+                op = cls(a, mesh, spec=spec)
                 hits += op.tune_config.source == "cache"
             built[kind] = op
         return built, hits

@@ -45,7 +45,7 @@ from repro.obs.metrics import MetricsRegistry
 from repro.sparse.matrix import SparseCSR
 from repro.tune.model import TuneConfig
 
-CACHE_VERSION = 4  # v4: entries carry a BLAKE2b config checksum
+CACHE_VERSION = 5  # v5: reorder decisions in keys + cached decision docs
 _ENV_VAR = "REPRO_TUNE_CACHE_DIR"
 _ENV_MAX = "REPRO_TUNE_CACHE_MAX"
 DEFAULT_MAX_ENTRIES = 512
@@ -76,13 +76,27 @@ def matrix_signature(a: SparseCSR) -> str:
 def tune_key(a: SparseCSR, *, op: str, width: int, dtype: str,
              backend: str, mode: str, tune: str,
              threshold: int | None = None, bk: int | None = None,
-             ts_tile: int | None = None) -> str:
+             ts_tile: int | None = None,
+             reorder: str | None = None) -> str:
     """Full cache key: sparsity signature + tuning context (including any
     explicit plan-parameter overrides — a result searched for one ``bk``
-    must not be served for another)."""
+    must not be served for another, nor a reordered pattern's for the
+    original's)."""
     h = hashlib.blake2b(digest_size=16)
     payload = (f"v{CACHE_VERSION}|{matrix_signature(a)}|{op}|{width}|"
-               f"{dtype}|{backend}|{mode}|{tune}|{threshold}|{bk}|{ts_tile}")
+               f"{dtype}|{backend}|{mode}|{tune}|{threshold}|{bk}|{ts_tile}"
+               f"|{reorder}")
+    h.update(payload.encode())
+    return h.hexdigest()
+
+
+def reorder_key(a: SparseCSR, *, op: str, threshold: int) -> str:
+    """Cache key for one ``reorder="auto"`` decision: the pattern
+    signature plus the threshold the TC-fraction gain was priced at.
+    Values never enter — the decision depends only on the pattern."""
+    h = hashlib.blake2b(digest_size=16)
+    payload = (f"v{CACHE_VERSION}|reorder|{matrix_signature(a)}|{op}|"
+               f"{threshold}")
     h.update(payload.encode())
     return h.hexdigest()
 
@@ -203,6 +217,62 @@ class PlanCache:
     def put(self, key: str, cfg: TuneConfig, meta: dict | None = None) -> str:
         os.makedirs(self.root, exist_ok=True)
         config = dataclasses.asdict(cfg)
+        doc = {
+            "version": CACHE_VERSION,
+            "config": config,
+            "checksum": config_checksum(config),
+            "meta": meta or {},
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1)
+                f.write("\n")
+            os.replace(tmp, self._path(key))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._evict()
+        return self._path(key)
+
+    def get_doc(self, key: str) -> dict | None:
+        """Fetch a plain-dict entry (e.g. a cached ``reorder="auto"``
+        decision) with the same verification/quarantine semantics as
+        :meth:`get`, minus the :class:`TuneConfig` parse."""
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            self._misses.inc()
+            return None
+        except (OSError, ValueError):
+            self._quarantine(path, "unparseable")
+            self._misses.inc()
+            return None
+        if doc.get("version") != CACHE_VERSION or doc.get("stale"):
+            self._misses.inc()
+            return None
+        cfg = doc.get("config")
+        if not isinstance(cfg, dict) \
+                or doc.get("checksum") != config_checksum(cfg):
+            self._quarantine(path, "checksum_mismatch")
+            self._misses.inc()
+            return None
+        try:
+            os.utime(path)  # LRU touch
+        except OSError:
+            pass
+        self._hits.inc()
+        return cfg
+
+    def put_doc(self, key: str, config: dict, meta: dict | None = None) -> str:
+        """Store a plain-dict entry under the standard checksummed,
+        atomic, LRU-capped envelope (see :meth:`put`)."""
+        os.makedirs(self.root, exist_ok=True)
         doc = {
             "version": CACHE_VERSION,
             "config": config,

@@ -1,0 +1,201 @@
+"""repro.api.ExecSpec: the consolidated execution-knob surface.
+
+Covers the frozen/hashable contract, the explicit > spec > default
+resolution order, the once-per-site deprecation shim, and — the
+migration guarantee — that every legacy kwarg call form builds the
+exact same operator as its ``spec=`` spelling (bit-identical outputs
+on shared inputs, equal tune configs)."""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    UNSET,
+    ExecSpec,
+    reset_deprecation_warnings,
+    resolve_spec,
+)
+from repro.core.sddmm import LibraSDDMM
+from repro.core.spmm import LibraSpMM
+from repro.sparse.generate import power_law_csr
+
+
+@pytest.fixture(autouse=True)
+def _fresh_shim():
+    reset_deprecation_warnings()
+    yield
+    reset_deprecation_warnings()
+
+
+def _mat(seed=0):
+    return power_law_csr(96, 80, avg_row=6.0, alpha=1.4, seed=seed)
+
+
+def _b(a, n=16, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((a.k, n)).astype(np.float32))
+
+
+# ------------------------------------------------------------- the spec ---
+def test_spec_frozen_and_hashable():
+    s = ExecSpec(mode="tcu", tune="off")
+    assert hash(s) == hash(ExecSpec(mode="tcu", tune="off"))
+    assert s != ExecSpec(mode="vpu", tune="off")
+    with pytest.raises(Exception):
+        s.mode = "vpu"
+    assert s.replace(mode="vpu").mode == "vpu"
+    assert s.mode == "tcu"  # replace did not mutate
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ExecSpec(reorder="maybe")
+    with pytest.raises(ValueError):
+        ExecSpec(mode="gpu")
+
+
+def test_resolution_order():
+    spec = ExecSpec(mode="tcu", threshold=7)
+    # explicit kwarg > spec field
+    assert spec.resolve("mode", "vpu") == "vpu"
+    assert spec.resolve("mode") == "tcu"
+    assert spec.resolve("threshold", None) is None  # explicit None wins
+    # resolve_spec folds explicit legacy kwargs over the spec...
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eff = resolve_spec(spec, "site-a", mode="vpu", threshold=UNSET)
+    assert eff.mode == "vpu" and eff.threshold == 7
+    # ...and spec=None starts from the defaults.
+    assert resolve_spec(None, "site-b").mode == "hybrid"
+
+
+def test_shim_warns_once_per_site():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        resolve_spec(None, "siteX", mode="tcu")
+        resolve_spec(None, "siteX", mode="vpu")   # same site: silent
+        resolve_spec(None, "siteY", mode="tcu")   # new site: warns
+        resolve_spec(None, "siteZ")               # no legacy: silent
+    warns = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(warns) == 2
+    assert "siteX" in str(warns[0].message)
+    assert "siteY" in str(warns[1].message)
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        resolve_spec(None, "siteX", mode="tcu")   # reset: warns again
+    assert len(rec) == 1
+
+
+# ------------------------------------------- legacy ≡ spec equivalence ---
+def test_legacy_equivalence_spmm():
+    a, b = _mat(), None
+    b = _b(a)
+    with pytest.warns(DeprecationWarning):
+        legacy = LibraSpMM(a, mode="tcu", tune="off")
+    spec = LibraSpMM(a, spec=ExecSpec(mode="tcu", tune="off"))
+    assert legacy.tune_config == spec.tune_config
+    assert np.array_equal(np.asarray(legacy(b)), np.asarray(spec(b)))
+
+
+def test_legacy_equivalence_spmm_threshold():
+    a, b = _mat(2), None
+    b = _b(a)
+    with pytest.warns(DeprecationWarning):
+        legacy = LibraSpMM(a, threshold=3, tune="off")
+    spec = LibraSpMM(a, spec=ExecSpec(threshold=3, tune="off"))
+    assert legacy.tune_config.threshold == 3
+    assert np.array_equal(np.asarray(legacy(b)), np.asarray(spec(b)))
+
+
+def test_legacy_equivalence_sddmm_threshold_maps():
+    # SDDMM's legacy ``threshold=`` maps to ExecSpec.sddmm_threshold.
+    a = _mat(3)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((a.m, 16)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((a.k, 16)).astype(np.float32))
+    with pytest.warns(DeprecationWarning):
+        legacy = LibraSDDMM(a, threshold=2, tune="off")
+    spec = LibraSDDMM(a, spec=ExecSpec(sddmm_threshold=2, tune="off"))
+    assert legacy.spec.sddmm_threshold == 2
+    assert legacy.spec.threshold is None  # did not leak into SpMM's knob
+    assert legacy.tune_config == spec.tune_config
+    assert np.array_equal(np.asarray(legacy(x, y)), np.asarray(spec(x, y)))
+
+
+def test_legacy_equivalence_graphops():
+    from repro.models.gnn import GraphOps
+
+    a, b = _mat(5), None
+    b = _b(a)
+    rng = np.random.default_rng(6)
+    ev = jnp.asarray(rng.standard_normal(a.nnz).astype(np.float32))
+    with pytest.warns(DeprecationWarning):
+        legacy = GraphOps(a, spmm_threshold=3)
+    # GraphOps' spec-less default stays tune="off" — the cheap legacy
+    # construction path must not silently start tuning.
+    assert legacy.spec.tune == "off"
+    spec = GraphOps(a, spec=ExecSpec(threshold=3, tune="off"))
+    assert np.array_equal(np.asarray(legacy.spmm(ev, b)),
+                          np.asarray(spec.spmm(ev, b)))
+
+
+def test_legacy_equivalence_sharded():
+    from repro.dist.sparse import ShardedSpMM
+
+    a, b = _mat(7), None
+    b = _b(a)
+    mesh = jax.make_mesh((1,), ("shards",))
+    with pytest.warns(DeprecationWarning):
+        legacy = ShardedSpMM(a, mesh, mode="tcu", tune="off")
+    spec = ShardedSpMM(a, mesh, spec=ExecSpec(mode="tcu", tune="off"))
+    assert np.array_equal(np.asarray(legacy(b)), np.asarray(spec(b)))
+
+
+def test_legacy_equivalence_partition():
+    from repro.dist.partition import partition_spmm
+
+    a = _mat(8)
+    with pytest.warns(DeprecationWarning):
+        legacy = partition_spmm(a, 2, mode="tcu", tune="off")
+    spec = partition_spmm(a, 2, spec=ExecSpec(mode="tcu", tune="off"))
+    assert legacy.run_cfg == spec.run_cfg
+    assert legacy.meta["shard_nnz"] == spec.meta["shard_nnz"]
+    assert np.array_equal(np.asarray(legacy.out_gather),
+                          np.asarray(spec.out_gather))
+
+
+def test_spec_threads_through_registry():
+    from repro.serve.registry import GraphRegistry
+
+    a = _mat(9)
+    reg = GraphRegistry()
+    n_off = reg.register(a, name="g-off",
+                         spec=ExecSpec(tune="off", reorder="off"))
+    n_on = reg.register(a, name="g-on",
+                        spec=ExecSpec(tune="off", reorder="auto"))
+    # Reorder mode is part of the registry key: same pattern, two specs,
+    # two distinct entries (no aliasing a reordered plan onto an
+    # unreordered handle).
+    assert reg.get(n_off).key != reg.get(n_on).key
+    b = _b(a)[None]  # one-panel batch
+    out_off = reg.get(n_off).op("spmm")(b)
+    out_on = reg.get(n_on).op("spmm")(b)
+    assert np.allclose(np.asarray(out_off), np.asarray(out_on), atol=1e-5)
+
+
+def test_plan_build_is_canonical():
+    from repro.core import preprocess
+
+    a = _mat(10)
+    spec = ExecSpec(tune="model")
+    built = preprocess.Plan.build(a, "spmm", spec)
+    op = LibraSpMM(a, spec=spec)
+    assert built.cfg == op.tune_config
+    assert built.plan.threshold == op.plan.threshold
+    assert built.plan.meta["tc_nnz"] == op.plan.meta["tc_nnz"]

@@ -187,12 +187,13 @@ class TestMetrics:
 # -------------------------------------------------- PlanCache metrics ---
 class TestPlanCacheMetrics:
     def test_quarantine_schema_and_bytes(self, tmp_path):
-        from repro.tune.cache import PlanCache
+        from repro.tune.cache import CACHE_VERSION, PlanCache
 
         pc = PlanCache(root=str(tmp_path))
         (tmp_path / "bad1.json").write_text("{not json")
         (tmp_path / "bad2.json").write_text(
-            '{"version": 4, "config": {}, "checksum": "nope"}')
+            '{"version": %d, "config": {}, "checksum": "nope"}'
+            % CACHE_VERSION)
         assert pc.get("bad1") is None
         assert pc.get("bad2") is None
         st = pc.stats()

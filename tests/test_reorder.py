@@ -1,0 +1,299 @@
+"""Row-reordering pass (repro.reorder): permutation invariants, the
+``auto`` pricing/caching policy, and — the load-bearing property —
+corpus-wide bit-identity of reordered plans against unreordered ones on
+integer-valued data. Float addition is exact on small integers, so any
+difference would mean the permutation re-associated or relabeled a sum
+instead of being the pure row relabeling it claims to be."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExecSpec
+from repro.core import preprocess
+from repro.core.sddmm import LibraSDDMM
+from repro.core.spmm import LibraSpMM
+from repro.kernels import ref
+from repro.kernels.ops import spmm_apply
+from repro.reorder import (
+    MIN_TC_GAIN,
+    apply_reorder,
+    decide_reorder,
+    reorder_csr,
+    reorder_rows,
+    row_sketches,
+)
+from repro.sparse.generate import (
+    block_structured_csr,
+    power_law_csr,
+    random_uniform_csr,
+)
+from repro.sparse.matrix import coo_to_csr
+from repro.tune.cache import PlanCache, reorder_key
+
+
+def shuffled_power_law(m, k, avg_row, alpha, seed):
+    a = power_law_csr(m, k, avg_row=avg_row, alpha=alpha, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    rows, cols, vals = a.to_coo()
+    return coo_to_csr(m, k, rng.permutation(m)[rows], cols, vals)
+
+
+def int_copy(a, rng, lo=1, hi=4):
+    """Same pattern, small-integer values (exact float addition)."""
+    return coo_to_csr(a.m, a.k, *a.to_coo()[:2],
+                      rng.integers(lo, hi, a.nnz).astype(np.float32))
+
+
+def small_corpus():
+    return {
+        "powerlaw_shuffled": shuffled_power_law(192, 160, 8.0, 1.5, 7),
+        "powerlaw": power_law_csr(160, 192, avg_row=10.0, alpha=1.4,
+                                  seed=5),
+        "uniform": random_uniform_csr(128, 144, density=0.06, seed=9),
+    }
+
+
+# ------------------------------------------------------ pure permutation ---
+def test_permutation_invariants():
+    for a in small_corpus().values():
+        reord = reorder_rows(a)
+        m, nnz = a.m, a.nnz
+        assert np.array_equal(np.sort(reord.row_perm), np.arange(m))
+        assert np.array_equal(reord.row_perm[reord.row_inv], np.arange(m))
+        assert np.array_equal(np.sort(reord.nnz_perm), np.arange(nnz))
+        assert np.array_equal(reord.nnz_perm[reord.nnz_inv],
+                              np.arange(nnz))
+        a_r = apply_reorder(a, reord)
+        # Documented value contract: reordered canonical data is the
+        # original canonical data gathered through nnz_perm.
+        assert np.array_equal(a_r.data, a.data[reord.nnz_perm])
+        # Dense view: reordered row i is original row row_perm[i].
+        assert np.array_equal(a_r.to_dense(),
+                              a.to_dense()[reord.row_perm])
+
+
+def test_reorder_is_deterministic():
+    a = shuffled_power_law(128, 96, 6.0, 1.4, 3)
+    r1, r2 = reorder_rows(a), reorder_rows(a)
+    assert np.array_equal(r1.row_perm, r2.row_perm)
+    assert np.array_equal(r1.nnz_perm, r2.nnz_perm)
+
+
+def test_sketches_identical_rows_collide():
+    # Three groups of rows sharing identical column sets must get
+    # identical bitsketches (they should cluster into the same window).
+    cols_of = {0: [1, 5, 9], 1: [2, 6], 2: [0, 3, 7, 8]}
+    rows, cols = [], []
+    for r in range(12):
+        for c in cols_of[r % 3]:
+            rows.append(r)
+            cols.append(c)
+    a = coo_to_csr(12, 10, np.array(rows), np.array(cols),
+                   np.ones(len(rows), np.float32))
+    sk = row_sketches(a)
+    for g in range(3):
+        group = sk[:, g::3]
+        assert np.all(group == group[:, :1])
+
+
+def test_decide_reorder_policy():
+    assert decide_reorder({"gain": MIN_TC_GAIN + 0.01})
+    assert not decide_reorder({"gain": MIN_TC_GAIN - 0.01})
+    assert not decide_reorder({"gain": -0.5})
+
+
+# ------------------------------------------------------------ Plan.build ---
+def test_plan_build_reorder_densifies():
+    a = shuffled_power_law(256, 224, 12.0, 1.4, 11)
+    spec_off = ExecSpec(tune="off", reorder="off")
+    built_off = preprocess.Plan.build(a, "spmm", spec_off)
+    built_on = preprocess.Plan.build(a, "spmm",
+                                     spec_off.replace(reorder="on"))
+    rep = built_on.plan.meta["reorder"]
+    assert rep["enabled"] and rep["gain"] > 0
+    assert built_on.plan.meta["tc_ratio"] > built_off.plan.meta["tc_ratio"]
+    assert built_on.reorder is not None and built_off.reorder is None
+    # pos maps remapped: every referenced position must be a valid
+    # original-canonical index (the -1 padding is preserved).
+    pos = built_on.plan.tc.pos
+    assert pos.min() >= -1 and pos.max() < a.nnz
+
+
+def test_plan_build_reorder_skips_trivial():
+    # Empty and single-window matrices never reorder, even with "on".
+    tiny = coo_to_csr(4, 8, np.array([0, 2]), np.array([1, 3]),
+                      np.ones(2, np.float32))
+    built = preprocess.Plan.build(tiny, "spmm",
+                                  ExecSpec(tune="off", reorder="on"))
+    assert built.reorder is None
+    assert built.plan.meta["reorder"] == {"mode": "on", "enabled": False}
+
+
+def test_auto_declines_structured():
+    a = block_structured_csr(256, 256, seed=1)
+    built = preprocess.Plan.build(a, "spmm",
+                                  ExecSpec(tune="off", reorder="auto"))
+    assert built.reorder is None
+    assert not built.plan.meta["reorder"]["enabled"]
+
+
+def test_auto_decision_cached(tmp_path):
+    a = block_structured_csr(256, 256, seed=1)
+    spec = ExecSpec(tune="off", reorder="auto", tune_cache=str(tmp_path))
+    preprocess.Plan.build(a, "spmm", spec)
+    key = reorder_key(a, op="spmm",
+                      threshold=preprocess.DEFAULT_SPMM_THRESHOLD)
+    doc = PlanCache(str(tmp_path)).get_doc(key)
+    assert doc is not None and doc["enabled"] is False
+    # Second build consumes the cached decline (report says so and the
+    # sketch pass is skipped — the report carries the cached numbers).
+    built2 = preprocess.Plan.build(a, "spmm", spec)
+    rep = built2.plan.meta["reorder"]
+    assert rep["mode"] == "auto" and not rep["enabled"]
+    assert rep["gain"] == pytest.approx(doc["gain"])
+
+
+def test_auto_decision_memoized_without_cache():
+    a = block_structured_csr(192, 192, seed=4)
+    preprocess._REORDER_MEMO.clear()
+    spec = ExecSpec(tune="off", reorder="auto")
+    preprocess.Plan.build(a, "spmm", spec)
+    key = reorder_key(a, op="spmm",
+                      threshold=preprocess.DEFAULT_SPMM_THRESHOLD)
+    assert key in preprocess._REORDER_MEMO
+    assert preprocess._REORDER_MEMO[key]["enabled"] is False
+
+
+# ----------------------------------------------------------- bit identity ---
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_spmm_bit_identity_corpus(backend):
+    rng = np.random.default_rng(11)
+    for a in small_corpus().values():
+        ai = int_copy(a, rng)
+        b = jnp.asarray(rng.integers(-2, 3, (a.k, 32)).astype(np.float32))
+        base = np.asarray(LibraSpMM(
+            ai, spec=ExecSpec(tune="off", reorder="off"))(b))
+        op = LibraSpMM(ai, spec=ExecSpec(tune="off", reorder="on",
+                                         backend=backend))
+        assert np.array_equal(base, np.asarray(op(b)))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_spmm_bit_identity_segmented(backend):
+    # tune="model" plans carry the §4.3 segment tables; the reordered
+    # segmented Pallas stream must still be bitwise inert.
+    rng = np.random.default_rng(13)
+    a = int_copy(shuffled_power_law(256, 192, 16.0, 1.3, 21), rng)
+    b = jnp.asarray(rng.integers(-2, 3, (a.k, 32)).astype(np.float32))
+    base = np.asarray(LibraSpMM(
+        a, spec=ExecSpec(tune="model", reorder="off"))(b))
+    op = LibraSpMM(a, spec=ExecSpec(tune="model", reorder="on",
+                                    backend=backend))
+    assert op.plan.meta["reorder"]["enabled"]
+    assert np.array_equal(base, np.asarray(op(b)))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_sddmm_bit_identity_corpus(backend):
+    rng = np.random.default_rng(17)
+    for a in small_corpus().values():
+        x = jnp.asarray(rng.integers(-2, 3, (a.m, 16)).astype(np.float32))
+        y = jnp.asarray(rng.integers(-2, 3, (a.k, 16)).astype(np.float32))
+        base = np.asarray(LibraSDDMM(
+            a, spec=ExecSpec(tune="off", reorder="off"))(x, y))
+        op = LibraSDDMM(a, spec=ExecSpec(tune="off", reorder="on",
+                                         backend=backend))
+        # Output is in the *original* canonical nnz order.
+        assert np.array_equal(base, np.asarray(op(x, y)))
+
+
+def test_revalue_bit_identity():
+    # edge_vals revaluation feeds *original*-canonical values into a
+    # reordered plan — the remapped pos tensors must route every value
+    # to the same output bit pattern as the unreordered plan.
+    rng = np.random.default_rng(19)
+    a = int_copy(shuffled_power_law(192, 160, 8.0, 1.5, 7), rng)
+    ev = jnp.asarray(rng.integers(1, 5, a.nnz).astype(np.float32))
+    b = jnp.asarray(rng.integers(-2, 3, (a.k, 32)).astype(np.float32))
+
+    def apply(spec):
+        op = LibraSpMM(a, spec=spec)
+        arrs = ref.revalue_spmm_arrays(op.arrays, ev)
+        out = spmm_apply(arrs, b, m=op.m, nwin=op.nwin, backend="xla",
+                         cfg=op.tune_config, interpret=True)
+        if op._row_unperm is not None:
+            out = jnp.take(out, op._row_unperm, axis=0)
+        return np.asarray(out)
+
+    base = apply(ExecSpec(tune="off", reorder="off"))
+    assert np.array_equal(base, apply(ExecSpec(tune="off", reorder="on")))
+
+
+def test_sharded_bit_identity():
+    from repro.dist.partition import partition_sddmm, partition_spmm
+    from repro.dist.sparse import sddmm_sharded, spmm_sharded
+
+    rng = np.random.default_rng(23)
+    a = int_copy(shuffled_power_law(192, 160, 8.0, 1.5, 7), rng)
+    ev = jnp.asarray(rng.integers(1, 5, a.nnz).astype(np.float32))
+    b = jnp.asarray(rng.integers(-2, 3, (a.k, 32)).astype(np.float32))
+    x = jnp.asarray(rng.integers(-2, 3, (a.m, 16)).astype(np.float32))
+    y = jnp.asarray(rng.integers(-2, 3, (a.k, 16)).astype(np.float32))
+    mesh = jax.make_mesh((1,), ("shards",))
+
+    p_off = partition_spmm(a, 1, spec=ExecSpec(tune="off", reorder="off"))
+    p_on = partition_spmm(a, 1, spec=ExecSpec(tune="off", reorder="on"))
+    assert p_on.meta["reorder"]["enabled"]
+    base = np.asarray(spmm_sharded(p_off, b, mesh=mesh))
+    assert np.array_equal(base, np.asarray(spmm_sharded(p_on, b, mesh=mesh)))
+    # Sharded revaluation: edge_vals stay in original canonical order;
+    # the partition's edge_perm gather routes them to the shard slices.
+    base_ev = np.asarray(spmm_sharded(p_off, b, mesh=mesh, edge_vals=ev))
+    assert np.array_equal(
+        base_ev, np.asarray(spmm_sharded(p_on, b, mesh=mesh, edge_vals=ev)))
+
+    s_off = partition_sddmm(a, 1, spec=ExecSpec(tune="off", reorder="off"))
+    s_on = partition_sddmm(a, 1, spec=ExecSpec(tune="off", reorder="on"))
+    base_sd = np.asarray(sddmm_sharded(s_off, x, y, mesh=mesh))
+    assert np.array_equal(
+        base_sd, np.asarray(sddmm_sharded(s_on, x, y, mesh=mesh)))
+
+
+def test_graphops_grads_bit_identity():
+    from repro.models.gnn import GraphOps
+
+    rng = np.random.default_rng(29)
+    a = int_copy(shuffled_power_law(96, 80, 6.0, 1.4, 31), rng)
+    ev = jnp.asarray(rng.integers(1, 4, a.nnz).astype(np.float32))
+    b = jnp.asarray(rng.integers(-2, 3, (a.k, 8)).astype(np.float32))
+
+    def loss_grads(spec):
+        g = GraphOps(a, spec=spec)
+        f = lambda v, bb: g.spmm(v, bb).sum()  # noqa: E731
+        return jax.grad(f, argnums=(0, 1))(ev, b)
+
+    g_off = loss_grads(ExecSpec(tune="off", reorder="off"))
+    g_on = loss_grads(ExecSpec(tune="off", reorder="on"))
+    for go, gn in zip(g_off, g_on):
+        assert np.array_equal(np.asarray(go), np.asarray(gn))
+
+
+def test_explain_surfaces_reorder():
+    from repro.obs.explain import explain_plan, render_table
+
+    a = shuffled_power_law(192, 160, 8.0, 1.5, 7)
+    op = LibraSpMM(a, spec=ExecSpec(tune="off", reorder="on"))
+    report = explain_plan(op.plan, cfg=op.tune_config)
+    assert report["reorder"]["enabled"]
+    table = render_table(report)
+    assert "reorder" in table and "tc_frac" in table
+
+
+def test_reorder_csr_roundtrip_values():
+    a = shuffled_power_law(128, 96, 6.0, 1.4, 3)
+    a_r, reord = reorder_csr(a)
+    # Scatter the reordered values back through nnz_inv → original data.
+    assert np.array_equal(a_r.data[reord.nnz_inv], a.data)
